@@ -1,0 +1,55 @@
+"""Shared benchmark plumbing: scaled task setup, timing, json output.
+
+Every benchmark module exposes ``run(out_dir) -> dict`` and can be invoked
+standalone (``python -m benchmarks.<name>``).  Results land in
+``experiments/<name>.json`` so EXPERIMENTS.md can cite exact numbers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+# CPU-friendly scales per dataset (fraction of paper Table 5 node counts).
+BENCH_SCALE = {
+    "corafull": 0.25, "flickr": 0.06, "coauthor-physics": 0.15,
+    "reddit": 0.02, "yelp": 0.008, "amazon-products": 0.004,
+    "ogbn-products": 0.0025,
+}
+
+
+def bench_task(name: str = "reddit", feat_dim: int = 64, seed: int = 0):
+    from repro.data import make_task
+    return make_task(name, scale=BENCH_SCALE.get(name, 0.02),
+                     feat_dim=feat_dim, seed=seed)
+
+
+def save(out_dir: str, name: str, payload: dict) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=_np_default)
+    return path
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0

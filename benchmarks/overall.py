@@ -1,0 +1,113 @@
+"""Paper Tables 7-8: overall performance + ablation.
+
+Configurations (Table 8 rows): Vanilla (all-halo exchange every step),
++JACA, +RAPA, +JACA+RAPA, +JACA+RAPA+Pipe — per dataset x {GCN, SAGE},
+heterogeneous x4 group.  Reports epoch time, exact communication bytes,
+and final validation accuracy; Table 7's cross-method comparison columns
+are the Vanilla vs full-CaPGNN pair.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (CacheCapacity, PAPER_GROUPS, RapaConfig,
+                        StalenessController, build_cache_plan, cal_capacity,
+                        do_partition, make_group)
+from repro.dist import (build_exchange_plan, make_sim_runtime,
+                        stack_partitions, train_capgnn)
+from repro.graph import build_partition, metis_partition
+from repro.models.gnn import GNNConfig
+from repro.optim import adam
+from ._util import DEFAULT_OUT, Timer, bench_task, save
+
+EPOCHS = 40
+DATASETS = ("flickr", "reddit")
+MODELS = ("gcn", "sage")
+
+
+def _variant(task, ps_base, profiles, model, jaca: bool, rapa: bool,
+             pipe: bool):
+    cfg = GNNConfig(model=model, in_dim=task.features.shape[1],
+                    hidden_dim=128, out_dim=task.num_classes, num_layers=3)
+    ps = ps_base
+    if rapa:
+        ps = do_partition(ps_base, profiles,
+                          RapaConfig(feat_dim=task.features.shape[1])
+                          ).partition_set
+    if jaca:
+        cap = cal_capacity(ps, cfg.feat_dims, profiles)
+        refresh = 4
+    else:
+        cap = CacheCapacity(c_gpu=[0] * ps.num_parts, c_cpu=0)
+        refresh = 1
+    plan = build_cache_plan(ps, cap, refresh_every=refresh)
+    xplan = build_exchange_plan(ps, plan)
+    sp = stack_partitions(ps, task)
+    opt = adam(0.01)
+    runtime = make_sim_runtime(cfg, sp, xplan, opt)
+    ctl = StalenessController(refresh_every=refresh)
+    with Timer() as t:
+        params, rep = train_capgnn(cfg, runtime, xplan, ps.num_parts, opt,
+                                   epochs=EPOCHS, controller=ctl,
+                                   eval_every=0, pipeline=pipe)
+    _, acc = runtime.evaluate(params, "test")
+    return {
+        "epoch_s": t.seconds / EPOCHS,
+        "comm_mb": rep.comm_bytes / 2 ** 20,
+        "comm_reduction": rep.comm_reduction,
+        "test_acc": acc,
+    }
+
+
+VARIANTS = [("vanilla", False, False, False),
+            ("+JACA", True, False, False),
+            ("+RAPA", False, True, False),
+            ("+JACA+RAPA", True, True, False),
+            ("+JACA+RAPA+Pipe", True, True, True)]
+
+
+def run(out_dir: str = DEFAULT_OUT) -> dict:
+    profiles = make_group(PAPER_GROUPS["x4"])
+    table = {}
+    for ds in DATASETS:
+        task = bench_task(ds)
+        ps = build_partition(task.graph,
+                             metis_partition(task.graph, 4, seed=0), hops=1)
+        for model in MODELS:
+            rows = {}
+            for name, jaca, rapa, pipe in VARIANTS:
+                rows[name] = _variant(task, ps, profiles, model, jaca, rapa,
+                                      pipe)
+            table[f"{ds}/{model}"] = rows
+
+    # headline claims
+    claims = {}
+    for key, rows in table.items():
+        van, full = rows["vanilla"], rows["+JACA+RAPA+Pipe"]
+        claims[key] = {
+            "comm_reduction_full": full["comm_reduction"],
+            "acc_delta": full["test_acc"] - van["test_acc"],
+            "comm_mb_vanilla": van["comm_mb"],
+            "comm_mb_full": full["comm_mb"],
+        }
+    out = {"table8": table, "claims": claims,
+           "max_comm_reduction": max(c["comm_reduction_full"]
+                                     for c in claims.values()),
+           "min_acc_delta": min(c["acc_delta"] for c in claims.values())}
+    save(out_dir, "overall", out)
+    return out
+
+
+def main():
+    out = run()
+    print(f"overall: max comm reduction {out['max_comm_reduction']:.1%}, "
+          f"worst acc delta {out['min_acc_delta']:+.3f}")
+    for key, rows in out["table8"].items():
+        cells = "  ".join(
+            f"{n}: {r['epoch_s']*1e3:.0f}ms/{r['comm_mb']:.1f}MB/"
+            f"{r['test_acc']:.3f}" for n, r in rows.items())
+        print(f"  {key}: {cells}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""§Roofline (deliverable g): three-term roofline per (arch x shape x mesh)
+from the dry-run artifacts in experiments/dryrun/.
+
+  compute term    = HLO_FLOPs / peak_FLOP/s          (per device)
+  memory term     = HLO_bytes / HBM_bw               (per device)
+  collective term = collective_bytes / link_bw       (per device)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Also reports MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (inference) and
+the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * devices).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config, canonical
+from ._util import DEFAULT_OUT, save
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def model_flops(arch: str, shape: str) -> float:
+    cfg = get_config(canonical(arch.split("+")[0]))  # strip +swa variant tag
+    seq, batch, kind = INPUT_SHAPES[shape]
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * seq * batch
+    if kind == "prefill":
+        return 2.0 * n * seq * batch
+    return 2.0 * n * batch           # decode: one token per sequence
+
+
+def analyse(rec: dict) -> dict:
+    t_comp = rec["hlo_flops_per_device"] / PEAK_FLOPS
+    t_mem = rec["hlo_bytes_per_device"] / HBM_BW
+    t_coll = rec["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    total_hlo = rec["hlo_flops_per_device"] * rec["devices"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "useful_ratio": mf / total_hlo if total_hlo else 0.0,
+        "step_time_lb_s": max(terms.values()),
+        "mfu_bound": (mf / rec["devices"] / PEAK_FLOPS)
+        / max(max(terms.values()), 1e-12),
+        "temp_bytes_per_device": rec["memory"]["temp_size"],
+    }
+
+
+def run(out_dir: str = DEFAULT_OUT) -> dict:
+    rows, perf_rows = [], []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyse(rec)
+        row["act_mode"] = rec.get("act_mode", "baseline")
+        (rows if row["act_mode"] == "baseline" else perf_rows).append(row)
+    by_dominant = {}
+    for r in rows:
+        by_dominant.setdefault(r["dominant"], []).append(
+            f"{r['arch']}/{r['shape']}/{r['mesh']}")
+    out = {"rows": rows, "perf_rows": perf_rows, "count": len(rows),
+           "dominant_histogram": {k: len(v) for k, v in by_dominant.items()},
+           "by_dominant": by_dominant}
+    save(out_dir, "roofline", out)
+    return out
+
+
+def table(rows, mesh="16x16") -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful | MFU-bound |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_bound']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    out = run()
+    print(f"roofline: {out['count']} (arch x shape x mesh) rows, "
+          f"dominant-term histogram {out['dominant_histogram']}")
+    print(table(out["rows"]))
+    if out["perf_rows"]:
+        print("\nblock_sp (§Perf hillclimb) rows:")
+        print(table(out["perf_rows"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark orchestrator: one suite per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only name ...]
+
+Each suite writes experiments/<name>.json and prints a summary line; the
+final PASS/FAIL recap checks the paper's qualitative claims hold.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = ["halo_obs", "cache_hit", "comm_volume", "rapa_balance",
+          "heterogeneous", "convergence", "overall", "kernels_bench",
+          "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    names = args.only or SUITES
+
+    import importlib
+    results, failures = {}, []
+    for name in names:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        print(f"=== {name} ===", flush=True)
+        t0 = time.perf_counter()
+        try:
+            mod.main()
+            results[name] = "ok"
+        except Exception as exc:  # noqa: BLE001 - keep the sweep going
+            failures.append((name, repr(exc)))
+            results[name] = f"FAIL {exc!r}"
+            print(f"FAIL {name}: {exc!r}")
+        print(f"--- {name} done in {time.perf_counter() - t0:.1f}s\n",
+              flush=True)
+
+    print("=== summary ===")
+    for name in names:
+        print(f"  {name:15s} {results[name]}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Multi-pod dry-run demo: lower + compile one (arch x shape) pair on the
+production meshes and print its roofline terms — the smallest end-to-end
+path through mesh.py / sharding.py / dryrun.py / hlo_cost.py.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py --arch hymba-1.5b \
+        --shape train_4k
+"""
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="hymba-1.5b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_one   # sets XLA_FLAGS before jax init
+    res = run_one(args.arch, args.shape, multi_pod=args.multi_pod)
+    print(json.dumps(res, indent=1))
+
+    peak, hbm, ici = 197e12, 819e9, 50e9
+    t_c = res["hlo_flops_per_device"] / peak
+    t_m = res["hlo_bytes_per_device"] / hbm
+    t_x = res["collective_bytes_per_device"] / ici
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    print(f"\nroofline terms: compute {t_c:.3e}s  memory {t_m:.3e}s  "
+          f"collective {t_x:.3e}s  -> {dom[0]}-bound")
+
+
+if __name__ == "__main__":
+    main()

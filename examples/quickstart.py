@@ -1,0 +1,65 @@
+"""Quickstart: CaPGNN full-batch GNN training on a partitioned graph.
+
+Builds a scaled Flickr-like graph, partitions it METIS-style, plans the
+JACA two-level cache, balances partitions with RAPA against a heterogeneous
+device group, and trains a 3-layer GCN with the staleness-scheduled step
+pair — printing the exact communication bytes saved vs vanilla.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import json
+
+import jax
+
+from repro.core import (PAPER_GROUPS, RapaConfig, StalenessController,
+                        build_cache_plan, cal_capacity, do_partition,
+                        halo_stats, make_group)
+from repro.data import make_task
+from repro.dist import (build_exchange_plan, make_sim_runtime,
+                        stack_partitions, train_capgnn)
+from repro.graph import build_partition, metis_partition
+from repro.models.gnn import GNNConfig
+from repro.optim import adam
+
+
+def main():
+    # 1. Data + graph partitioning ---------------------------------------
+    task = make_task("flickr", scale=0.05, feat_dim=64, seed=0)
+    parts = 4
+    assign = metis_partition(task.graph, parts, seed=0)
+    ps = build_partition(task.graph, assign, hops=1)
+    print("halo stats:", json.dumps(halo_stats(ps).as_dict(), indent=1))
+
+    # 2. RAPA: balance partitions against a heterogeneous device group ---
+    profiles = make_group(PAPER_GROUPS["x4"])   # 2x RTX3090 + 2x A40
+    rapa = do_partition(ps, profiles, RapaConfig(feat_dim=64))
+    ps = rapa.partition_set
+    print(f"RAPA: removed {rapa.removed_per_part} halo replicas/part, "
+          f"cost rel-std {rapa.history[0]['std']/max(rapa.history[0]['lambda'].mean(),1e-9):.3f}"
+          f" -> {rapa.history[-1]['std']/max(rapa.history[-1]['lambda'].mean(),1e-9):.3f}")
+
+    # 3. JACA: adaptive capacity + two-level cache plan ------------------
+    cfg = GNNConfig(model="gcn", in_dim=64, hidden_dim=128,
+                    out_dim=task.num_classes, num_layers=3)
+    cap = cal_capacity(ps, cfg.feat_dims, profiles)
+    plan = build_cache_plan(ps, cap, refresh_every=4)
+    xplan = build_exchange_plan(ps, plan)
+
+    # 4. Train with the staleness-scheduled step pair --------------------
+    sp = stack_partitions(ps, task)
+    opt = adam(0.01)
+    runtime = make_sim_runtime(cfg, sp, xplan, opt)
+    ctl = StalenessController(refresh_every=4)
+    params, report = train_capgnn(cfg, runtime, xplan, parts, opt,
+                                  epochs=60, controller=ctl, pipeline=True)
+    _, test_acc = runtime.evaluate(params, "test")
+
+    print(f"final loss {report.losses[-1]:.4f}  test acc {test_acc:.3f}")
+    print(f"comm {report.comm_bytes/2**20:.1f} MiB "
+          f"(vanilla {report.comm_bytes_vanilla/2**20:.1f} MiB, "
+          f"saved {report.comm_reduction:.1%}) over "
+          f"{report.refresh_steps} refresh + {report.cached_steps} cached steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Serve demo: batched greedy decode for any of the 10 assigned archs.
+
+Runs the reduced config of each requested architecture through the serve
+path (one-token steps against a KV/SSM cache) and prints throughput —
+a thin example wrapper over ``repro.launch.serve``.
+
+    PYTHONPATH=src python examples/serve_transformer.py --arch hymba-1.5b
+    PYTHONPATH=src python examples/serve_transformer.py --all
+"""
+import argparse
+import sys
+
+from repro.configs import ARCH_IDS
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--all", action="store_true",
+                    help="serve every assigned architecture (reduced)")
+    ap.add_argument("--steps", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.launch import serve
+    archs = ARCH_IDS if args.all else [args.arch]
+    for arch in archs:
+        sys.argv = ["serve", "--arch", arch, "--steps", str(args.steps)]
+        serve.main()
+
+
+if __name__ == "__main__":
+    main()

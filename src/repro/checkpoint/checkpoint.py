@@ -1,0 +1,88 @@
+"""Sharding-aware pytree checkpointing (npz payload + json treedef).
+
+Writes are atomic (tmp + rename).  Sharded arrays are gathered to host
+before save; on restore the caller re-shards via its own NamedSharding (we
+store only the logical arrays, which is the portable choice when restore
+topology differs from save topology — e.g. single-pod -> multi-pod).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+_LEAF_KEY = "leaf_{:05d}"
+
+# npz only understands built-in numpy dtypes; ml_dtypes leaves (bfloat16,
+# fp8, ...) are stored as a same-width uint view + a dtype-name record.
+_UINT_OF_WIDTH = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _is_native_dtype(dt: np.dtype) -> bool:
+    try:
+        return np.dtype(dt.name) == dt
+    except TypeError:
+        return False
+
+
+def _encode(leaf: np.ndarray) -> tuple[np.ndarray, str]:
+    dt = leaf.dtype
+    if _is_native_dtype(dt):
+        return leaf, dt.name
+    return leaf.view(_UINT_OF_WIDTH[dt.itemsize]), dt.name
+
+
+def _decode(raw: np.ndarray, dtype_name: str) -> np.ndarray:
+    if _is_native_dtype(raw.dtype) and raw.dtype.name == dtype_name:
+        return raw
+    import jax.numpy as jnp
+    return raw.view(np.dtype(getattr(jnp, dtype_name)))
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+    encoded = [_encode(leaf) for leaf in host_leaves]
+    payload = {_LEAF_KEY.format(i): raw for i, (raw, _) in enumerate(encoded)}
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+    os.replace(tmp, path)
+    meta = {"step": step, "num_leaves": len(host_leaves),
+            "dtypes": [name for _, name in encoded],
+            "treedef": str(treedef)}
+    meta_path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")
+    with open(meta_path + ".tmp", "w") as f:
+        json.dump(meta, f)
+    os.replace(meta_path + ".tmp", meta_path)
+    return path
+
+
+def load_checkpoint(ckpt_dir: str, step: int, like):
+    """Restore into the structure of ``like`` (validates leaf count/shapes)."""
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")) as f:
+        meta = json.load(f)
+    leaves, treedef = jax.tree.flatten(like)
+    restored = [_decode(data[_LEAF_KEY.format(i)], meta["dtypes"][i])
+                for i in range(len(leaves))]
+    for i, (r, l) in enumerate(zip(restored, leaves)):
+        if hasattr(l, "shape") and tuple(r.shape) != tuple(np.shape(l)):
+            raise ValueError(f"leaf {i}: shape {r.shape} != expected {np.shape(l)}")
+    return jax.tree.unflatten(treedef, restored)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

@@ -1,0 +1,15 @@
+"""Qwen3-14B — dense GQA decoder with qk-norm.  [hf:Qwen/Qwen3-8B]"""
+import dataclasses
+from repro.models.transformer.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b", arch_type="dense",
+    num_layers=40, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=17408, vocab_size=151936,
+    qk_norm=True, rope_theta=1e6, norm="rmsnorm", ffn_act="swiglu",
+    remat=True, source="hf:Qwen/Qwen3-8B (14B sibling config)",
+)
+
+REDUCED = dataclasses.replace(
+    CONFIG, name="qwen3-14b-reduced", num_layers=2, d_model=256, n_heads=4,
+    n_kv_heads=2, head_dim=64, d_ff=512, vocab_size=512, remat=False)

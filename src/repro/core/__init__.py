@@ -1,0 +1,23 @@
+"""CaPGNN core: halo analytics, JACA caching, RAPA partitioning, staleness."""
+from .device_profile import (DeviceProfile, PROFILES, PAPER_GROUPS, TPU_V5E,
+                             measure_profile, make_group)
+from .halo import HaloStats, halo_stats, overlap_histogram, duplicate_count
+from .jaca import (CacheCapacity, cal_capacity, CachePlan, WorkerCachePlan,
+                   build_cache_plan, plan_hit_rate, simulate_policy_hit_rate,
+                   comm_bytes_per_step)
+from .rapa import (RapaConfig, RapaResult, comm_cost, comp_cost,
+                   influence_scores, adjust_subgraph, do_partition,
+                   memory_bytes)
+from .staleness import StalenessController, theorem1_bound
+
+__all__ = [
+    "DeviceProfile", "PROFILES", "PAPER_GROUPS", "TPU_V5E", "measure_profile",
+    "make_group",
+    "HaloStats", "halo_stats", "overlap_histogram", "duplicate_count",
+    "CacheCapacity", "cal_capacity", "CachePlan", "WorkerCachePlan",
+    "build_cache_plan", "plan_hit_rate", "simulate_policy_hit_rate",
+    "comm_bytes_per_step",
+    "RapaConfig", "RapaResult", "comm_cost", "comp_cost", "influence_scores",
+    "adjust_subgraph", "do_partition", "memory_bytes",
+    "StalenessController", "theorem1_bound",
+]

@@ -1,0 +1,296 @@
+"""JACA — Joint Adaptive Caching Algorithm (paper §4.2, Alg. 1, Eq. 2).
+
+Two-level cache for halo vertex features/embeddings:
+
+- **local cache**  — per-worker, device (HBM) resident, capacity ``C_GPU[i]``;
+- **global cache** — shared across workers (CPU shared memory in the paper;
+  a replicated buffer refreshed by collective here), capacity ``C_CPU``.
+
+Full-batch training touches every halo vertex every epoch, so the paper
+ranks candidates by the *static* *vertex overlap ratio* R(v) (Eq. 2) rather
+than modelling a dynamic access stream.  We compile that ranking into a
+:class:`CachePlan`:
+
+- per worker, the halo set is split into ``local``, ``global`` and
+  ``uncached`` tiers (priority order: highest R first into local, then
+  global),
+- the distributed step exchanges only ``uncached`` halos every iteration;
+  cached tiers are *refreshed* every ``refresh_every`` iterations (bounded
+  staleness, §4.2 "Staleness in CaPGNN"),
+- therefore per-step communication volume is exactly measurable and hit
+  rates are exact (they are plan properties, reported by
+  :func:`plan_hit_rate`).
+
+FIFO/LRU baselines (paper Figs. 15-16) are provided via a trace simulator
+over the epoch access stream since those policies are genuinely dynamic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, deque
+from typing import Literal, Sequence
+
+import numpy as np
+
+from repro.graph.partition import PartitionSet
+from .device_profile import DeviceProfile
+
+__all__ = ["CacheCapacity", "cal_capacity", "CachePlan", "WorkerCachePlan",
+           "build_cache_plan", "plan_hit_rate", "simulate_policy_hit_rate",
+           "comm_bytes_per_step"]
+
+Policy = Literal["overlap_high", "overlap_low", "random", "fifo", "lru"]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: adaptive cache capacity
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CacheCapacity:
+    c_gpu: list[int]    # per-worker local-cache capacity (vertices)
+    c_cpu: int          # shared global-cache capacity (vertices)
+
+
+def cal_capacity(ps: PartitionSet, feat_dims: Sequence[int],
+                 profiles: Sequence[DeviceProfile],
+                 m_cpu_gib: float = 16.0,
+                 reserved_gpu_mib: float = 512.0,
+                 reserved_cpu_mib: float = 1024.0,
+                 top_k: int = -1) -> CacheCapacity:
+    """Paper Algorithm 1 (``cal_capacity``).
+
+    A cached vertex stores one row per layer of the feature dims in
+    ``feat_dims`` (input features + per-layer embeddings), fp32.
+    ``top_k`` limits candidates per partition (-1 = all halo vertices).
+    """
+    bytes_per_vertex = float(sum(d * 4 for d in feat_dims))
+    c_gpu: list[int] = []
+    h_cpu: set[int] = set()
+    for i, part in enumerate(ps.parts):
+        n_cand = part.n_halo if top_k < 0 else min(top_k, part.n_halo)
+        avail = max(0.0, profiles[i].mem_gib * 1024.0 - reserved_gpu_mib) * 1024.0 ** 2
+        cap = int(min(avail // bytes_per_vertex, n_cand))
+        c_gpu.append(cap)
+        # candidates contribute to the CPU tier's working set
+        h_cpu.update(int(v) for v in part.halo_nodes[:n_cand])
+    avail_cpu = max(0.0, m_cpu_gib * 1024.0 - reserved_cpu_mib) * 1024.0 ** 2
+    c_cpu = int(min(avail_cpu // bytes_per_vertex, len(h_cpu)))
+    return CacheCapacity(c_gpu=c_gpu, c_cpu=c_cpu)
+
+
+# ---------------------------------------------------------------------------
+# Cache plan (static tiering by overlap ratio)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WorkerCachePlan:
+    """Tiering of one worker's halo slots.
+
+    All index arrays are *local halo positions* in ``[0, n_halo)`` (the
+    partition's halo block is local ids ``n_inner + pos``).
+    """
+    part_id: int
+    local_pos: np.ndarray      # cached in this worker's local (HBM) cache
+    global_pos: np.ndarray     # served from the shared global cache
+    uncached_pos: np.ndarray   # exchanged every step
+    # global ids for each tier (same order as the pos arrays)
+    local_gids: np.ndarray
+    global_gids: np.ndarray
+    uncached_gids: np.ndarray
+
+    @property
+    def n_halo(self) -> int:
+        return (self.local_pos.size + self.global_pos.size
+                + self.uncached_pos.size)
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePlan:
+    workers: list[WorkerCachePlan]
+    capacity: CacheCapacity
+    global_gids: np.ndarray    # unique gids resident in the global cache
+    refresh_every: int         # staleness period tau (1 = always fresh)
+
+    def worker(self, i: int) -> WorkerCachePlan:
+        return self.workers[i]
+
+
+def build_cache_plan(ps: PartitionSet, capacity: CacheCapacity,
+                     refresh_every: int = 4,
+                     policy: Policy = "overlap_high",
+                     seed: int = 0) -> CachePlan:
+    """Split each worker's halo set into local/global/uncached tiers.
+
+    ``overlap_high`` is JACA (paper Eq. 2 priority).  ``overlap_low`` and
+    ``random`` are the ablation orderings of Fig. 14.  (FIFO/LRU are
+    runtime policies — see :func:`simulate_policy_hit_rate`.)
+    """
+    rng = np.random.default_rng(seed)
+    overlap = ps.overlap_ratio()
+
+    # Global tier: under JACA ('overlap_high') the C_CPU vertices with the
+    # highest overlap across *all* partitions — exactly the ones whose dedup
+    # saves the most (a vertex with R(v)=k would otherwise be sent k times).
+    # The ablation orderings apply the same (inverted/random) priority here
+    # too, so Fig. 14 compares full-policy against full-policy.
+    halo_union = ps.halo_union()
+    if policy == "overlap_low":
+        order = np.argsort(overlap[halo_union], kind="stable")
+    elif policy == "random":
+        order = rng.permutation(halo_union.size)
+    else:
+        order = np.argsort(-overlap[halo_union], kind="stable")
+    global_gids = halo_union[order][: capacity.c_cpu]
+    global_set = set(int(v) for v in global_gids)
+
+    workers: list[WorkerCachePlan] = []
+    for i, part in enumerate(ps.parts):
+        pos = np.arange(part.n_halo)
+        gids = part.halo_nodes
+        pri = overlap[gids].astype(np.float64)
+        if policy == "overlap_high":
+            rank = np.argsort(-pri, kind="stable")
+        elif policy == "overlap_low":
+            rank = np.argsort(pri, kind="stable")
+        elif policy == "random":
+            rank = rng.permutation(part.n_halo)
+        else:
+            raise ValueError(f"policy {policy!r} is a runtime policy; "
+                             "use simulate_policy_hit_rate for it")
+        c_local = min(capacity.c_gpu[i], part.n_halo)
+        local_sel = rank[:c_local]
+        rest = rank[c_local:]
+        in_global = np.array([int(gids[p]) in global_set for p in rest],
+                             dtype=bool) if rest.size else np.zeros(0, bool)
+        global_sel = rest[in_global]
+        uncached_sel = rest[~in_global]
+        workers.append(WorkerCachePlan(
+            part_id=i,
+            local_pos=np.sort(pos[local_sel]),
+            global_pos=np.sort(pos[global_sel]),
+            uncached_pos=np.sort(pos[uncached_sel]),
+            local_gids=gids[np.sort(pos[local_sel])],
+            global_gids=gids[np.sort(pos[global_sel])],
+            uncached_gids=gids[np.sort(pos[uncached_sel])],
+        ))
+    return CachePlan(workers=workers, capacity=capacity,
+                     global_gids=global_gids, refresh_every=refresh_every)
+
+
+def plan_hit_rate(plan: CachePlan) -> dict:
+    """Exact hit rates of a static plan over one epoch (every halo touched).
+
+    A 'hit' = halo access served from a cache tier instead of communicated.
+    On refresh steps cached tiers are also communicated; the *amortised*
+    hit rate accounts for that via refresh_every.
+    """
+    n_local = sum(w.local_pos.size for w in plan.workers)
+    n_global = sum(w.global_pos.size for w in plan.workers)
+    n_un = sum(w.uncached_pos.size for w in plan.workers)
+    total = max(1, n_local + n_global + n_un)
+    tau = plan.refresh_every
+    amortised = (n_local + n_global) * (1.0 - 1.0 / max(1, tau)) / total
+    return {
+        "local_hit": n_local / total,
+        "global_hit": n_global / total,
+        "hit": (n_local + n_global) / total,
+        "amortised_hit": amortised,
+        "miss": n_un / total,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Dynamic policy baselines (FIFO / LRU) over the epoch access stream
+# ---------------------------------------------------------------------------
+
+def _epoch_stream(ps: PartitionSet, layers: int, seed: int) -> np.ndarray:
+    """Access stream of one epoch: per layer, every partition touches all of
+    its halo vertices (vertex-id order within partition, as the aggregation
+    sweep does)."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for _ in range(layers):
+        for part in ps.parts:
+            chunks.append(part.halo_nodes)
+    return np.concatenate(chunks) if chunks else np.zeros(0, np.int64)
+
+
+def simulate_policy_hit_rate(ps: PartitionSet, capacity: int,
+                             policy: Policy = "lru", layers: int = 3,
+                             epochs: int = 3, seed: int = 0) -> float:
+    """Trace-simulate FIFO/LRU (and the static policies for comparison) on
+    the epoch access stream; returns overall hit rate (paper Fig. 15)."""
+    stream = _epoch_stream(ps, layers, seed)
+    if stream.size == 0:
+        return 0.0
+    if policy in ("overlap_high", "overlap_low", "random"):
+        overlap = ps.overlap_ratio()
+        uniq = np.unique(stream)
+        pri = overlap[uniq].astype(float)
+        rng = np.random.default_rng(seed)
+        if policy == "overlap_high":
+            order = np.argsort(-pri, kind="stable")
+        elif policy == "overlap_low":
+            order = np.argsort(pri, kind="stable")
+        else:
+            order = rng.permutation(uniq.size)
+        cached = set(int(v) for v in uniq[order][:capacity])
+        hits = sum(1 for _ in range(epochs) for v in stream if int(v) in cached)
+        return hits / (epochs * stream.size)
+    hits = 0
+    if policy == "fifo":
+        cache: set[int] = set()
+        fifo: deque[int] = deque()
+        for _ in range(epochs):
+            for v in stream:
+                v = int(v)
+                if v in cache:
+                    hits += 1
+                else:
+                    if len(cache) >= capacity and fifo:
+                        cache.discard(fifo.popleft())
+                    cache.add(v)
+                    fifo.append(v)
+    elif policy == "lru":
+        lru: OrderedDict[int, None] = OrderedDict()
+        for _ in range(epochs):
+            for v in stream:
+                v = int(v)
+                if v in lru:
+                    hits += 1
+                    lru.move_to_end(v)
+                else:
+                    if len(lru) >= capacity:
+                        lru.popitem(last=False)
+                    lru[v] = None
+    else:
+        raise ValueError(policy)
+    return hits / (epochs * stream.size)
+
+
+def comm_bytes_per_step(plan: CachePlan, feat_dim: int,
+                        dtype_bytes: int = 4) -> dict:
+    """Exact communication volume implied by a plan (per training step).
+
+    cached step: only uncached halos move.
+    refresh step: all halos move (uncached + both cache tiers refresh), but
+    global-tier rows are deduplicated — one broadcast row per unique vertex
+    instead of one copy per consumer partition.
+    """
+    n_un = sum(w.uncached_pos.size for w in plan.workers)
+    n_local = sum(w.local_pos.size for w in plan.workers)
+    n_global_dedup = int(plan.global_gids.size)
+    row = feat_dim * dtype_bytes
+    cached_step = n_un * row
+    refresh_step = (n_un + n_local + n_global_dedup) * row
+    tau = max(1, plan.refresh_every)
+    amortised = (cached_step * (tau - 1) + refresh_step) / tau
+    no_cache = (n_un + n_local + sum(w.global_pos.size for w in plan.workers)) * row
+    return {
+        "cached_step_bytes": cached_step,
+        "refresh_step_bytes": refresh_step,
+        "amortised_bytes": amortised,
+        "no_cache_bytes": no_cache,
+        "reduction": 1.0 - amortised / max(1, no_cache),
+    }

@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: cache row gather (JACA 'pick_cache' hot path).
+
+Gathers cached halo rows ``out[i] = src[idx[i]]`` — the inner loop of the
+cache read path.  Thanks to the reordering pass (repro.graph.reorder) the
+hot cache tier is *contiguous by construction*, so the common case is a
+dense ``dynamic_slice``; this kernel covers the general (permuted) case
+with a tiled vectorised take, VMEM-resident source stripes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gather_rows_pallas"]
+
+
+def _kernel(idx_ref, src_ref, out_ref):
+    idx = idx_ref[...]            # [BR, 1] int32
+    src = src_ref[...]            # [n_src, BF]
+    out_ref[...] = jnp.take(src, idx[:, 0], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_feat",
+                                             "interpret"))
+def gather_rows_pallas(src: jnp.ndarray, idx: jnp.ndarray, *,
+                       block_rows: int = 128, block_feat: int = 128,
+                       interpret: bool = True) -> jnp.ndarray:
+    """out[i] = src[idx[i]].  idx [n_out] int32, src [n_src, d]."""
+    n_out = idx.shape[0]
+    n_src, d = src.shape
+    assert n_out % block_rows == 0, (n_out, block_rows)
+    assert d % block_feat == 0, (d, block_feat)
+    idx2 = idx.reshape(n_out, 1).astype(jnp.int32)
+    grid = (n_out // block_rows, d // block_feat)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_src, block_feat), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_feat), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_out, d), src.dtype),
+        interpret=interpret,
+    )(idx2, src)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ell_spmm_ref", "cache_combine_ref", "masked_mean_ref"]
+
+
+def ell_spmm_ref(cols: jnp.ndarray, vals: jnp.ndarray, h: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """out[i] = sum_k vals[i, k] * h[cols[i, k]].
+
+    cols: [n_rows, max_deg] int32 (padding entries must have vals == 0;
+    their col ids may be arbitrary valid ids).
+    vals: [n_rows, max_deg] float.
+    h:    [n_cols, d].
+    """
+    gathered = h[cols]                      # [n_rows, max_deg, d]
+    return jnp.einsum("rk,rkd->rd", vals, gathered)
+
+
+def cache_combine_ref(local_rows: jnp.ndarray, local_pos: jnp.ndarray,
+                      global_rows: jnp.ndarray, global_pos: jnp.ndarray,
+                      recv_rows: jnp.ndarray, recv_pos: jnp.ndarray,
+                      n_halo: int) -> jnp.ndarray:
+    """Scatter three row sources into one [n_halo, d] halo buffer.
+
+    Position arrays index into the halo buffer; each halo slot is covered by
+    exactly one source (plan property).  Empty sources are allowed
+    (size-0 leading dims).
+    """
+    d = local_rows.shape[-1] if local_rows.size else (
+        global_rows.shape[-1] if global_rows.size else recv_rows.shape[-1])
+    out = jnp.zeros((n_halo, d), local_rows.dtype if local_rows.size else
+                    (global_rows.dtype if global_rows.size else recv_rows.dtype))
+    if local_rows.shape[0]:
+        out = out.at[local_pos].set(local_rows)
+    if global_rows.shape[0]:
+        out = out.at[global_pos].set(global_rows)
+    if recv_rows.shape[0]:
+        out = out.at[recv_pos].set(recv_rows)
+    return out
+
+
+def masked_mean_ref(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Row-masked column mean: mean over rows where mask==1."""
+    m = mask.astype(x.dtype)[:, None]
+    return (x * m).sum(0) / jnp.maximum(m.sum(), 1.0)

@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Single pod: 256 TPU v5e chips as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16); the ``pod``
+axis extends data parallelism (or sequence sharding for long-context).
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "dp_axes", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present; "
+            "the dry-run entry point must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import")
+    import numpy as np
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes that shard tokens (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+class HW:
+    """TPU v5e per-chip hardware constants (roofline)."""
+    PEAK_BF16_FLOPS = 197e12     # FLOP/s
+    HBM_BW = 819e9               # B/s
+    ICI_BW = 50e9                # B/s per link (per brief)
+    HBM_GIB = 16.0

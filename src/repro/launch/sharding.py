@@ -1,0 +1,278 @@
+"""Sharding rules: parameter specs, activation specs, input specs.
+
+Rules are path-name based over the param pytree; GSPMD pads non-divisible
+dims (e.g. 40 q-heads or 2 kv-heads over a 16-way model axis), which the
+roofline accounting treats as measured waste rather than hiding it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import ModelConfig, SpmdCtx
+from repro.models.transformer.model import init_model, init_decode_cache
+from .mesh import dp_axes
+
+__all__ = ["param_specs", "param_shardings", "make_spmd_ctx", "batch_specs",
+           "decode_state_specs", "abstract_params", "attach"]
+
+M = "model"
+
+
+def _leaf_spec(path: tuple[str, ...], leaf, ep_experts: bool) -> P:
+    """PartitionSpec for one (unstacked) param leaf, by name rules.
+
+    ``ep_experts``: expert count divides the model axis -> expert-parallel
+    layout [E/model, D/data, F]; otherwise tensor-parallel experts
+    [E, D, F/model].
+    """
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    nd = leaf.ndim
+
+    def spec(*axes):
+        return P(*(list(axes) + [None] * nd)[:nd])
+
+    if name == "embed":
+        return spec(M, None)
+    if name == "lm_head":
+        return spec(None, M)
+    if name in ("scale", "bias", "eps"):
+        return spec(None)
+    # attention
+    if name in ("wq", "wk", "wv") and parent == "attn":
+        return spec(None, M)
+    if name in ("bq", "bk", "bv"):
+        return spec(M)
+    if name == "wo":
+        return spec(M, None)
+    if name in ("wdq", "wuq", "wukv"):
+        return spec(None, M)
+    if name == "wdkv":
+        return spec(None, None)
+    # ffn / shared expert
+    if name in ("wg", "wu", "wi") and nd == 2:
+        return spec(None, M)
+    if name == "wd" and nd == 2:
+        return spec(M, None)
+    if name == "bi":
+        return spec(M)
+    # moe experts [E, D, F] / [E, F, D]
+    if nd == 3 and name in ("wg", "wu"):
+        return spec(M, "data", None) if ep_experts else spec(None, None, M)
+    if nd == 3 and name == "wd":
+        return spec(M, None, "data") if ep_experts else spec(None, M, None)
+    if name == "router":
+        return spec(None, None)
+    # mlstm
+    if name in ("wz",):
+        return spec(None, M)
+    if name == "wif":
+        return spec(None, None)
+    # slstm
+    if name == "r":
+        return spec(None)
+    # mamba
+    if name == "win":
+        return spec(None, M)
+    if name == "wout":
+        return spec(M, None)
+    if name in ("wbc", "wdt1", "a_log"):
+        return spec(M, None)
+    if name in ("conv", "conv_b", "wdt2", "dt_b", "d_skip"):
+        return spec(None)
+    if name == "wg" and parent != "attn":  # slstm gates [D, 4D]
+        return spec(None, M)
+    return spec(None)
+
+
+def _path_names(path) -> tuple[str, ...]:
+    names = []
+    for e in path:
+        if hasattr(e, "key"):
+            names.append(str(e.key))
+        elif hasattr(e, "idx"):
+            names.append(f"[{e.idx}]")
+        elif hasattr(e, "name"):
+            names.append(str(e.name))
+    return tuple(names)
+
+
+def param_specs(cfg: ModelConfig, params_shape, *, model_size: int = 16,
+                data_size: int = 16, zero_data: bool = False) -> Any:
+    """PartitionSpec tree matching the param pytree (handles the stacked
+    run axis: anything under 'runs' gets a leading None).
+
+    ``zero_data``: additionally shard the largest still-unsharded,
+    data-divisible dim over 'data' (ZeRO-1 — used for optimizer moments).
+    Every chosen axis is validated against the dim size (input shardings
+    must divide evenly) and dropped if it does not fit.
+    """
+    ep_experts = cfg.n_experts > 0 and cfg.n_experts % model_size == 0
+
+    def one(path, leaf):
+        names = _path_names(path)
+        stacked = "runs" in names
+        base_names = tuple(n for n in names if not n.startswith("["))
+
+        class V:
+            ndim = leaf.ndim - (1 if stacked else 0)
+        sp = _leaf_spec(base_names if base_names else names, V, ep_experts)
+        if stacked:
+            sp = P(*([None] + list(sp)))
+        # validate divisibility; drop axes that do not fit
+        sizes = {"model": model_size, "data": data_size}
+        ent = []
+        for dim, ax in zip(leaf.shape, tuple(sp) + (None,) * leaf.ndim):
+            if ax is not None and dim % sizes.get(ax, 1) != 0:
+                ax = None
+            ent.append(ax)
+        if zero_data and "data" not in ent:
+            start = 1 if stacked else 0
+            cands = [i for i in range(start, leaf.ndim)
+                     if ent[i] is None and leaf.shape[i] % data_size == 0]
+            if cands:
+                big = max(cands, key=lambda i: leaf.shape[i])
+                ent[big] = "data"
+        return P(*ent)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(mesh: Mesh, cfg: ModelConfig, params_shape,
+                    zero_data: bool = False):
+    specs = param_specs(cfg, params_shape,
+                        model_size=mesh.shape.get("model", 1),
+                        data_size=mesh.shape.get("data", 1),
+                        zero_data=zero_data)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_model(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def attach(shape_tree, sharding_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shape_tree, sharding_tree)
+
+
+def make_spmd_ctx(mesh: Mesh, cfg: ModelConfig, shape_kind: str,
+                  seq_shard: bool, act_mode: str = "baseline") -> SpmdCtx:
+    """Activation sharding policy.
+
+    train/prefill: batch over dp; hidden sequence dim sharded over 'model'
+    between blocks (Megatron-style sequence parallelism — keeps the saved
+    residuals at 1/16 size, which is what lets 14B x 4k x 256 fit HBM).
+    long-context (seq_shard): sequence over dp instead of batch.
+    decode: batch over dp.
+
+    ``act_mode='block_sp'`` (§Perf) keeps the same between-block residual
+    layout but adds per-block constraints that gather the sequence once and
+    shard heads / SSM channels over 'model' inside attention and recurrent
+    scans — removing the per-chunk / per-timestep collectives GSPMD
+    otherwise inserts.
+    """
+    dp = dp_axes(mesh)
+    if seq_shard:
+        act = P(None, dp, None)
+        logits = P(None, dp, None)
+    elif shape_kind in ("train", "prefill"):
+        act = P(dp, M, None)
+        logits = P(dp, None, M)
+    else:
+        act = P(dp, None, None)
+        logits = P(dp, None, M)
+    return SpmdCtx(mesh=mesh, dp_axes=dp, act_spec=act, logits_spec=logits,
+                   block_sp=(act_mode == "block_sp"
+                             and shape_kind in ("train", "prefill")
+                             and not seq_shard))
+
+
+def batch_specs(mesh: Mesh, cfg: ModelConfig, seq_len: int, batch: int,
+                shape_kind: str, seq_shard: bool):
+    """ShapeDtypeStructs (with shardings) for the input batch."""
+    dp = dp_axes(mesh)
+    tok_spec = P(None, dp) if seq_shard else P(dp, None)
+    tok_sh = NamedSharding(mesh, tok_spec)
+    s_text = seq_len - (cfg.vision_tokens or 0)
+    batch_tree = {
+        "tokens": jax.ShapeDtypeStruct((batch, s_text), jnp.int32,
+                                       sharding=tok_sh),
+        "labels": jax.ShapeDtypeStruct((batch, s_text), jnp.int32,
+                                       sharding=tok_sh),
+    }
+    if cfg.vision_tokens:
+        batch_tree["patches"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(dp, None, None)))
+    return batch_tree
+
+
+def _cache_leaf_spec(path_names, leaf_shape, cfg, seq_shard, dp,
+                     sizes) -> P:
+    """Sharding for decode-cache leaves (divisibility-checked; for k/v the
+    model axis lands on kv-heads when divisible, else on head_dim)."""
+    name = path_names[-1] if path_names else ""
+    nd = len(leaf_shape)
+    m_size = sizes.get("model", 1)
+
+    def fit(sp):
+        ent = []
+        for dim, ax in zip(leaf_shape, tuple(sp) + (None,) * nd):
+            if ax is not None:
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = 1
+                for a in axes:
+                    n *= sizes.get(a, 1)
+                if dim % n != 0:
+                    ax = None
+            ent.append(ax)
+        return P(*ent)
+
+    if name in ("k", "v"):          # [L, B, W, nkv, hd]
+        head_ax = M if leaf_shape[3] % m_size == 0 else None
+        dim_ax = None if head_ax else (M if leaf_shape[4] % m_size == 0 else None)
+        if seq_shard:
+            return fit(P(None, None, dp, head_ax, dim_ax))
+        return fit(P(None, dp, None, head_ax, dim_ax))
+    if name == "pos":               # [L, B, W]
+        return fit(P(None, None, dp) if seq_shard else P(None, dp, None))
+    if name == "ckv":               # [L, B, S, kvl]
+        return fit(P(None, None, dp, M) if seq_shard
+                   else P(None, dp, None, M))
+    if name == "kr":                # [L, B, S, rdim]
+        return fit(P(None, None, dp, None) if seq_shard
+                   else P(None, dp, None, None))
+    if name == "conv":              # [L, B, CW-1, DI]
+        return fit(P(None, None if seq_shard else dp, None, M))
+    if name == "h" and nd == 4:     # mamba state [L, B, DI, N]
+        return fit(P(None, None if seq_shard else dp, M, None))
+    # mlstm state c [L,B,H,dk,dv] / n [L,B,H,dk]; slstm states [L,B,D]
+    specs = [None, None if seq_shard else dp] + [None] * (nd - 2)
+    return fit(P(*specs))
+
+
+def decode_state_specs(mesh: Mesh, cfg: ModelConfig, batch: int,
+                       max_len: int, seq_shard: bool):
+    """ShapeDtypeStructs for the stacked decode caches."""
+    dp = dp_axes(mesh)
+    sizes = dict(mesh.shape)
+    cache_shape = jax.eval_shape(
+        lambda: init_decode_cache(cfg, batch, max_len))
+
+    def one(path, leaf):
+        names = _path_names(path)
+        sp = _cache_leaf_spec(names, leaf.shape, cfg, seq_shard, dp, sizes)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, sp))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,169 @@
+"""Training launchers.
+
+Two entry points:
+
+- ``python -m repro.launch.train gnn ...``  — CaPGNN full-batch GNN
+  training (the paper's workload): partitions, JACA plan, RAPA balance,
+  staleness schedule, byte accounting.
+- ``python -m repro.launch.train lm --arch <id> ...`` — token-LM training
+  for the architecture-zoo configs (reduced or full), single host.
+
+Both are host-scale drivers; the production mesh path is exercised by
+``repro.launch.dryrun`` (this container has one real device).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def run_gnn(args) -> dict:
+    import jax
+    from repro.core import (PROFILES, PAPER_GROUPS, make_group, cal_capacity,
+                            build_cache_plan, do_partition, RapaConfig,
+                            CacheCapacity, StalenessController)
+    from repro.data import make_task
+    from repro.dist import (build_exchange_plan, stack_partitions,
+                            make_sim_runtime, train_capgnn)
+    from repro.graph import metis_partition, random_partition, build_partition
+    from repro.models.gnn import GNNConfig
+    from repro.optim import adam
+
+    task = make_task(args.dataset, scale=args.scale, feat_dim=args.feat_dim,
+                     seed=args.seed)
+    g = task.graph
+    p = args.parts
+    part_fn = {"metis": metis_partition, "random": random_partition}[args.partitioner]
+    assign = part_fn(g, p, seed=args.seed)
+    ps = build_partition(g, assign, hops=1)
+
+    profiles = make_group(PAPER_GROUPS[f"x{p}"]) if f"x{p}" in PAPER_GROUPS \
+        else [PROFILES["rtx3090"]] * p
+    if args.rapa:
+        res = do_partition(ps, profiles, RapaConfig(feat_dim=args.feat_dim))
+        ps = res.partition_set
+
+    cfg = GNNConfig(model=args.model, in_dim=task.features.shape[1],
+                    hidden_dim=args.hidden, out_dim=task.num_classes,
+                    num_layers=args.layers)
+    if args.jaca:
+        cap = cal_capacity(ps, cfg.feat_dims, profiles,
+                           m_cpu_gib=args.cpu_cache_gib)
+    else:
+        cap = CacheCapacity(c_gpu=[0] * p, c_cpu=0)
+    plan = build_cache_plan(ps, cap, refresh_every=args.refresh_every)
+    xplan = build_exchange_plan(ps, plan)
+    sp = stack_partitions(ps, task)
+    opt = adam(args.lr)
+    runtime = make_sim_runtime(cfg, sp, xplan, opt,
+                               exchange_layer0=not args.jaca)
+    ctl = StalenessController(refresh_every=args.refresh_every,
+                             adaptive=args.adaptive_staleness)
+    params, report = train_capgnn(cfg, runtime, xplan, p, opt,
+                                  epochs=args.epochs, controller=ctl,
+                                  pipeline=args.pipeline, seed=args.seed)
+    _, test_acc = runtime.evaluate(params, "test")
+    out = {
+        "dataset": args.dataset, "model": args.model, "parts": p,
+        "epochs": args.epochs, "final_loss": report.losses[-1],
+        "test_acc": test_acc, "comm_bytes": report.comm_bytes,
+        "comm_reduction_vs_vanilla": report.comm_reduction,
+        "refresh_steps": report.refresh_steps,
+        "cached_steps": report.cached_steps,
+        "wall_time_s": round(report.wall_time_s, 2),
+    }
+    print(json.dumps(out, indent=1))
+    if args.ckpt_dir:
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(args.ckpt_dir, args.epochs, params)
+    return out
+
+
+def run_lm(args) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, get_reduced
+    from repro.data import synthetic_token_batches
+    from repro.models.transformer import init_model, train_step_fn
+    from repro.optim import adamw
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    params = init_model(jax.random.PRNGKey(args.seed), cfg)
+    opt = adamw(args.lr)
+    opt_state = opt.init(params)
+    step = jax.jit(train_step_fn(cfg, opt))
+    gen = synthetic_token_batches(cfg.vocab_size, args.seq_len, args.batch,
+                                  seed=args.seed)
+    losses = []
+    t0 = time.perf_counter()
+    for i, host_batch in zip(range(args.steps), gen):
+        batch = {"tokens": jnp.asarray(host_batch["tokens"]),
+                 "labels": jnp.asarray(host_batch["labels"])}
+        if cfg.vision_tokens:
+            batch["patches"] = jnp.zeros(
+                (args.batch, cfg.vision_tokens, cfg.d_model),
+                jnp.dtype(cfg.dtype))
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    wall = time.perf_counter() - t0
+    out = {"arch": cfg.name, "steps": args.steps, "loss_first": losses[0],
+           "loss_last": losses[-1], "tokens_per_s":
+           round(args.steps * args.batch * args.seq_len / wall, 1)}
+    print(json.dumps(out, indent=1))
+    if args.ckpt_dir:
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(args.ckpt_dir, args.steps, params)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    g = sub.add_parser("gnn")
+    g.add_argument("--dataset", default="flickr")
+    g.add_argument("--scale", type=float, default=0.02)
+    g.add_argument("--feat-dim", type=int, default=64)
+    g.add_argument("--model", default="gcn",
+                   choices=["gcn", "sage", "gat", "gin"])
+    g.add_argument("--hidden", type=int, default=256)
+    g.add_argument("--layers", type=int, default=3)
+    g.add_argument("--parts", type=int, default=4)
+    g.add_argument("--partitioner", default="metis",
+                   choices=["metis", "random"])
+    g.add_argument("--epochs", type=int, default=200)
+    g.add_argument("--lr", type=float, default=0.01)
+    g.add_argument("--jaca", action="store_true", default=True)
+    g.add_argument("--no-jaca", dest="jaca", action="store_false")
+    g.add_argument("--rapa", action="store_true", default=True)
+    g.add_argument("--no-rapa", dest="rapa", action="store_false")
+    g.add_argument("--pipeline", action="store_true", default=True)
+    g.add_argument("--no-pipeline", dest="pipeline", action="store_false")
+    g.add_argument("--refresh-every", type=int, default=4)
+    g.add_argument("--adaptive-staleness", action="store_true")
+    g.add_argument("--cpu-cache-gib", type=float, default=4.0)
+    g.add_argument("--seed", type=int, default=0)
+    g.add_argument("--ckpt-dir", default="")
+    g.set_defaults(fn=run_gnn)
+
+    l = sub.add_parser("lm")
+    l.add_argument("--arch", required=True)
+    l.add_argument("--reduced", action="store_true", default=True)
+    l.add_argument("--full", dest="reduced", action="store_false")
+    l.add_argument("--steps", type=int, default=20)
+    l.add_argument("--batch", type=int, default=4)
+    l.add_argument("--seq-len", type=int, default=128)
+    l.add_argument("--lr", type=float, default=3e-4)
+    l.add_argument("--seed", type=int, default=0)
+    l.add_argument("--ckpt-dir", default="")
+    l.set_defaults(fn=run_lm)
+
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .config import ModelConfig
+from .model import (init_model, forward, loss_fn, train_step_fn,
+                    init_decode_cache, serve_step, param_count)
+from .spmd import SpmdCtx, use_spmd, current_spmd
+
+__all__ = ["ModelConfig", "init_model", "forward", "loss_fn",
+           "train_step_fn", "init_decode_cache", "serve_step", "param_count",
+           "SpmdCtx", "use_spmd", "current_spmd"]

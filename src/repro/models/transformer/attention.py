@@ -1,0 +1,213 @@
+"""Attention: GQA (+RoPE, qk-norm, bias, sliding window) and MLA.
+
+Training/prefill attention is **blocked** (flash-style running-softmax over
+KV chunks, O(chunk^2) memory) so 32k-sequence prefill lowers without an
+S x S temporary; with a sliding window the KV iteration is **banded**
+(only window//chunk + 1 chunks per query chunk => O(S*W) compute), which is
+what makes dense archs eligible for the long_500k shape.
+
+Decode attends one query against the cache; MLA decode runs in the
+compressed (kv_lora) space via weight absorption, so the cache holds
+``kv_lora + rope_dim`` per token instead of ``2 * n_heads * head_dim``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope", "rope_at", "blocked_attention", "decode_attention",
+           "banded_attention"]
+
+_NEG_INF = -1e30
+
+
+def _rope_angles(positions: jnp.ndarray, dim: int, theta: float):
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., dim/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x [..., S, H, D], positions [S] (or broadcastable)."""
+    d = x.shape[-1]
+    cos, sin = _rope_angles(positions, d, theta)       # [S, D/2]
+    cos = cos[:, None, :]                              # [S, 1, D/2]
+    sin = sin[:, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.stack([y1, y2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def rope_at(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """RoPE for a single decode position. x [B, 1, H, D], pos scalar."""
+    return rope(x, jnp.reshape(pos, (1,)), theta)
+
+
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B, S, nkv, D] -> [B, S, nq, D] by group repeat."""
+    nkv = k.shape[2]
+    if nkv == n_heads:
+        return k
+    rep = n_heads // nkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def blocked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, q_chunk: int = 512,
+                      k_chunk: int = 512) -> jnp.ndarray:
+    """Flash-style causal attention.  q [B,S,Hq,D], k/v [B,S,Hkv,D].
+
+    Memory per step: O(B * Hq * q_chunk * k_chunk).  Query chunks via
+    lax.map, KV chunks via lax.scan carrying (m, l, acc).
+    """
+    b, s, hq, d = q.shape
+    dv = v.shape[-1]
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+    qc = min(q_chunk, s)
+    kc = min(k_chunk, s)
+    pad_q = (-s) % qc
+    pad_k = (-s) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq, sk = q.shape[1], k.shape[1]
+    nq, nk = sq // qc, sk // kc
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    q_r = q.reshape(b, nq, qc, hq, d).transpose(1, 0, 3, 2, 4)   # [nq,B,H,qc,D]
+    k_r = k.reshape(b, nk, kc, hq, d).transpose(1, 0, 3, 2, 4)
+    v_r = v.reshape(b, nk, kc, hq, dv).transpose(1, 0, 3, 2, 4)
+    kv_valid = (jnp.arange(sk) < s).reshape(nk, kc)
+
+    def per_q_chunk(args):
+        qi, q_blk = args                         # q_blk [B,H,qc,D]
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, k_blk, v_blk, valid = inp
+            sc = jnp.einsum("bhqd,bhkd->bhqk", q_blk.astype(jnp.float32),
+                            k_blk.astype(jnp.float32)) * scale
+            k_pos = ki * kc + jnp.arange(kc)
+            mask = valid[None, None, None, :]
+            if causal:
+                mask = mask & (k_pos[None, None, None, :]
+                               <= q_pos[None, None, :, None])
+            sc = jnp.where(mask, sc, _NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, qc), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, qc), jnp.float32)
+        a0 = jnp.zeros((b, hq, qc, dv), jnp.float32)
+        # checkpoint each KV step: backward recomputes the [qc, kc] score
+        # tile instead of stashing it (flash-attention memory behaviour)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            (jnp.arange(nk), k_r, v_r, kv_valid))
+        return acc / jnp.maximum(l, 1e-20)[..., None]
+
+    out = jax.lax.map(per_q_chunk, (jnp.arange(nq), q_r))  # [nq,B,H,qc,Dv]
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sq, hq, dv)
+    return out[:, :s].astype(q.dtype)
+
+
+def banded_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     window: int, *, chunk: int = 512) -> jnp.ndarray:
+    """Sliding-window causal attention with O(S * window) compute.
+
+    For query chunk i, only KV chunks in [i - window//chunk, i] are touched
+    (dynamic_slice), so compute and memory scale with the band, not S^2.
+    """
+    b, s, hq, d = q.shape
+    k = _expand_kv(k, hq)
+    v = _expand_kv(v, hq)
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = q.shape[1]
+    n = sp // c
+    n_band = min(n - 1, (window + c - 1) // c)    # trailing chunks + diagonal
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    q_r = q.reshape(b, n, c, hq, d).transpose(1, 0, 3, 2, 4)  # [n,B,H,c,D]
+    k_t = k.transpose(0, 2, 1, 3)                             # [B,H,S,D]
+    v_t = v.transpose(0, 2, 1, 3)
+
+    def per_q_chunk(args):
+        qi, q_blk = args
+        q_pos = qi * c + jnp.arange(c)
+
+        def band_step(carry, off):
+            m, l, acc = carry
+            ki = qi - n_band + off                 # chunk index (may be < 0)
+            start = jnp.maximum(ki, 0) * c
+            k_blk = jax.lax.dynamic_slice_in_dim(k_t, start, c, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v_t, start, c, axis=2)
+            sc = jnp.einsum("bhqd,bhkd->bhqk", q_blk.astype(jnp.float32),
+                            k_blk.astype(jnp.float32)) * scale
+            k_pos = start + jnp.arange(c)
+            mask = (k_pos[None, None, None, :] <= q_pos[None, None, :, None])
+            mask &= (q_pos[None, None, :, None] - k_pos[None, None, None, :]
+                     < window)
+            mask &= (ki >= 0)
+            mask &= (k_pos[None, None, None, :] < s)
+            sc = jnp.where(mask, sc, _NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, c), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hq, c), jnp.float32)
+        a0 = jnp.zeros((b, hq, c, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(band_step), (m0, l0, a0),
+                                      jnp.arange(n_band + 1))
+        return acc / jnp.maximum(l, 1e-20)[..., None]
+
+    out = jax.lax.map(per_q_chunk, (jnp.arange(n), q_r))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sp, hq, d)
+    return out[:, :s].astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, length: jnp.ndarray, *,
+                     window: Optional[int] = None) -> jnp.ndarray:
+    """One-token attention.  q [B,1,Hq,D], caches [B,S,Hkv,D].
+
+    ``length`` = number of valid cache entries (new token's position).
+    The softmax runs in f32; with a window only the last ``window``
+    positions score (the cache itself may be a ring buffer upstream).
+    """
+    b, _, hq, d = q.shape
+    s = k_cache.shape[1]
+    k_cache = _expand_kv(k_cache, hq)
+    v_cache = _expand_kv(v_cache, hq)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    sc = jnp.einsum("bohd,bshd->bhos", q.astype(jnp.float32),
+                    k_cache.astype(jnp.float32)) * scale    # [B,H,1,S]
+    pos = jnp.arange(s)
+    mask = pos[None, None, None, :] <= length
+    if window is not None:
+        mask &= pos[None, None, None, :] > (length - window)
+    sc = jnp.where(mask, sc, _NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhos,bshd->bohd", w, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,723 @@
+"""Decoder blocks for the architecture zoo: init + apply (train & decode).
+
+Block kinds (config.block_kinds):
+- ``attn_dense``  — [qk-norm|bias|SWA] GQA or MLA attention + dense FFN
+- ``attn_moe``    — attention + top-k MoE FFN (capacity-based dispatch,
+                    optional shared experts)
+- ``mlstm``       — xLSTM matrix-memory block (chunked linear attention)
+- ``slstm``       — xLSTM scalar-memory block (sequential recurrence)
+- ``hybrid``      — Hymba-style parallel attention + Mamba heads, then FFN
+
+Params are plain dicts; each init_* takes (key, cfg) and returns one
+layer's params, the model stacks them per run for ``lax.scan``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import rms_norm, layer_norm
+from repro.nn.init import normal_init, zeros_init
+from .attention import (rope, blocked_attention, banded_attention,
+                        decode_attention)
+from .config import ModelConfig
+from .spmd import (block_sp_active as _bsp_active, block_sp_dp as _bsp_dp,
+                   constrain_to as _constrain_to)
+from .ssm import (MlstmState, mlstm_chunked, selective_scan,
+                  selective_scan_step, SlstmState, slstm_scan, slstm_step)
+
+__all__ = ["init_block", "apply_block", "init_block_cache", "norm_apply"]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(p, x)
+    return rms_norm(p, x)
+
+
+def _norm_params(d: int) -> dict:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    if cfg.use_mla:
+        ql, kvl = cfg.q_lora_rank, cfg.kv_lora_rank
+        nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        p = {
+            "wdq": normal_init(ks[0], (d, ql), dtype=dt),
+            "q_norm": _norm_params(ql),
+            "wuq": normal_init(ks[1], (ql, nq * (nope + rdim)), dtype=dt),
+            "wdkv": normal_init(ks[2], (d, kvl + rdim), dtype=dt),
+            "kv_norm": _norm_params(kvl),
+            "wukv": normal_init(ks[3], (kvl, nq * (nope + vdim)), dtype=dt),
+            "wo": normal_init(ks[4], (nq * vdim, d), dtype=dt),
+        }
+        return p
+    p = {
+        "wq": normal_init(ks[0], (d, nq * hd), dtype=dt),
+        "wk": normal_init(ks[1], (d, nkv * hd), dtype=dt),
+        "wv": normal_init(ks[2], (d, nkv * hd), dtype=dt),
+        "wo": normal_init(ks[3], (nq * hd, d), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init(ks[4], (nq * hd,), dt)
+        p["bk"] = zeros_init(ks[5], (nkv * hd,), dt)
+        p["bv"] = zeros_init(ks[6], (nkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = _norm_params(hd)
+        p["k_norm"] = _norm_params(hd)
+    return p
+
+
+def _apply_attn(cfg: ModelConfig, p: dict, x, positions, cache, pos):
+    """x [B,S,D].  Train when cache is None, else one-token decode."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    if cfg.use_mla:
+        return _apply_mla(cfg, p, x, positions, cache, pos)
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, nq, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q)
+        k = rms_norm(p["k_norm"], k)
+    if cache is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        if _bsp_active():
+            # block-SP: gather the sequence ONCE here (residuals between
+            # blocks stay seq-sharded) and shard heads over 'model' (GSPMD
+            # pads non-divisible head counts), so the chunked-attention
+            # loops below execute with zero per-chunk collectives.  KV is
+            # expanded to the full query-head count FIRST — a post-shard
+            # jnp.repeat over a head-sharded dim would reshard per chunk.
+            # (A context-parallel variant — q seq-sharded, KV replicated —
+            # was tried and REFUTED: GSPMD replicated the q-chunk compute,
+            # 2x flops and more collectives; see EXPERIMENTS.md §Perf.)
+            from .attention import _expand_kv
+            from jax.sharding import PartitionSpec as P
+            k = _expand_kv(k, nq)
+            v = _expand_kv(v, nq)
+            hspec = P(_bsp_dp(), None, "model", None)
+            q = _constrain_to(q, hspec)
+            k = _constrain_to(k, hspec)
+            v = _constrain_to(v, hspec)
+        if cfg.attn_window and cfg.attn_window < s:
+            o = banded_attention(q, k, v, cfg.attn_window)
+        else:
+            o = blocked_attention(q, k, v, causal=True)
+        new_cache = None
+    else:
+        q = rope(q, pos[None], cfg.rope_theta)
+        k = rope(k, pos[None], cfg.rope_theta)
+        w_len = cache["k"].shape[1]
+        slot = jnp.where(w_len < 10 ** 9, pos % w_len, pos)
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.full((b, 1), pos, cache["pos"].dtype), slot, axis=1)
+        sc_mask_low = pos - (cfg.attn_window or 10 ** 9)
+        # cpos == -1 marks a never-written slot; it must stay masked or the
+        # zero keys dilute the softmax (decode != prefill).
+        valid = (cpos >= 0) & (cpos <= pos) & (cpos > sc_mask_low)
+        o = _decode_attn_ring(q, ck, cv, valid)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    o = o.reshape(b, s, nq * hd)
+    return (o @ p["wo"]).astype(x.dtype), new_cache
+
+
+def _decode_attn_ring(q, ck, cv, valid):
+    """Decode attention over a (possibly ring-buffer) cache with an explicit
+    per-slot validity mask.  q [B,1,Hq,hd], ck/cv [B,W,Hkv,hd]."""
+    b, _, hq, hd = q.shape
+    nkv = ck.shape[2]
+    if nkv != hq:
+        rep = hq // nkv
+        ck = jnp.repeat(ck, rep, axis=2)
+        cv = jnp.repeat(cv, rep, axis=2)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    sc = jnp.einsum("bohd,bshd->bhos", q.astype(jnp.float32),
+                    ck.astype(jnp.float32)) * scale
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhos,bshd->bohd", w, cv.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def _apply_mla(cfg: ModelConfig, p: dict, x, positions, cache, pos):
+    """DeepSeek MLA.  Train: expanded form.  Decode: absorbed/compressed."""
+    b, s, d = x.shape
+    nq = cfg.n_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    cq = rms_norm(p["q_norm"], x @ p["wdq"])
+    qall = (cq @ p["wuq"]).reshape(b, s, nq, nope + rdim)
+    q_nope, q_rope = qall[..., :nope], qall[..., nope:]
+    dkv = x @ p["wdkv"]                       # [B,S,kvl+rdim]
+    ckv = rms_norm(p["kv_norm"], dkv[..., :kvl])
+    k_rope = dkv[..., kvl:].reshape(b, s, 1, rdim)
+    if cache is None:
+        q_rope = rope(q_rope, positions, cfg.rope_theta)
+        k_rope_r = rope(k_rope, positions, cfg.rope_theta)
+        kv = (ckv @ p["wukv"]).reshape(b, s, nq, nope + vdim)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope_r, (b, s, nq, rdim))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        if _bsp_active():
+            # block-SP (see _apply_attn): seq gathered once, heads sharded
+            # over 'model' (MLA nq=128 divides a 16-way axis exactly).
+            from jax.sharding import PartitionSpec as P
+            hspec = P(_bsp_dp(), None, "model", None)
+            q = _constrain_to(q, hspec)
+            k = _constrain_to(k, hspec)
+            v = _constrain_to(v, hspec)
+        o = blocked_attention(q, k, v, causal=True)
+        o = o.reshape(b, s, nq * vdim)
+        return (o @ p["wo"]).astype(x.dtype), None
+    # --- absorbed decode: cache (ckv, k_rope), score in compressed space ---
+    q_rope = rope(q_rope, pos[None], cfg.rope_theta)
+    k_rope_r = rope(k_rope, pos[None], cfg.rope_theta)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv.astype(cache["ckv"].dtype), pos, axis=1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], k_rope_r[:, :, 0].astype(cache["kr"].dtype), pos, axis=1)
+    wukv = p["wukv"].reshape(kvl, nq, nope + vdim)
+    w_uk = wukv[..., :nope]                   # [kvl, nq, nope]
+    w_uv = wukv[..., nope:]                   # [kvl, nq, vdim]
+    q_abs = jnp.einsum("bohn,lhn->bohl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))          # [B,1,nq,kvl]
+    sc = jnp.einsum("bohl,bsl->bhos", q_abs,
+                    c_cache.astype(jnp.float32))
+    sc += jnp.einsum("bohr,bsr->bhos", q_rope.astype(jnp.float32),
+                     r_cache.astype(jnp.float32))
+    sc *= 1.0 / jnp.sqrt(nope + rdim)
+    slen = c_cache.shape[1]
+    spos = jnp.arange(slen)[None, None, None, :]
+    mask = spos <= pos
+    if cfg.attn_window:  # +swa long-context variant
+        mask &= spos > (pos - cfg.attn_window)
+    sc = jnp.where(mask, sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    ctx_c = jnp.einsum("bhos,bsl->bohl", w, c_cache.astype(jnp.float32))
+    o = jnp.einsum("bohl,lhv->bohv", ctx_c, w_uv.astype(jnp.float32))
+    o = o.reshape(b, s, nq * vdim).astype(x.dtype)
+    return o @ p["wo"], {"ckv": c_cache, "kr": r_cache}
+
+
+# ---------------------------------------------------------------------------
+# FFN sub-blocks
+# ---------------------------------------------------------------------------
+
+def _init_ffn(key, cfg: ModelConfig, d_ff: int) -> dict:
+    d, dt = cfg.d_model, _dtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.ffn_act == "swiglu":
+        return {"wg": normal_init(k1, (d, d_ff), dtype=dt),
+                "wu": normal_init(k2, (d, d_ff), dtype=dt),
+                "wd": normal_init(k3, (d_ff, d), dtype=dt)}
+    return {"wi": normal_init(k1, (d, d_ff), dtype=dt),
+            "bi": zeros_init(k2, (d_ff,), dt),
+            "wd": normal_init(k3, (d_ff, d), dtype=dt)}
+
+
+def _apply_ffn(cfg: ModelConfig, p: dict, x):
+    if cfg.ffn_act == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    return jax.nn.gelu(x @ p["wi"] + p["bi"]) @ p["wd"]
+
+
+def _init_moe(key, cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, _dtype(cfg)
+    e = cfg.n_experts
+    fe = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {"router": normal_init(ks[0], (d, e), stddev=0.02, dtype=jnp.float32),
+         "wg": normal_init(ks[1], (e, d, fe), dtype=dt),
+         "wu": normal_init(ks[2], (e, d, fe), dtype=dt),
+         "wd": normal_init(ks[3], (e, fe, d), dtype=dt)}
+    if cfg.n_shared_experts:
+        p["shared"] = _init_ffn(ks[4], cfg, fe * cfg.n_shared_experts)
+    return p
+
+
+def _apply_moe(cfg: ModelConfig, p: dict, x, capacity_factor: float = 1.25):
+    """Top-k MoE with sort-based capacity dispatch.
+
+    Tokens are routed to ``[E, cap]`` expert buffers via a stable sort on
+    expert id (no [T, E, cap] one-hot — that is infeasible at E=256);
+    overflowing tokens are dropped (residual path keeps them).  Runs on
+    the *local* token block when wrapped in partial-manual shard_map (see
+    ``_moe_dispatch``); the expert-dim einsums stay GSPMD-sharded over the
+    'model' axis (expert parallelism).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    gates = jax.nn.softmax(logits, -1)                   # [T,E]
+    topv, topi = jax.lax.top_k(gates, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    cap = max(1, int(t * k / e * capacity_factor))
+
+    eid = topi.reshape(-1)                               # [T*k]
+    gate = topv.reshape(-1)
+    tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tok_s, gate_s = eid[order], tok[order], gate[order]
+    counts = jnp.bincount(eid, length=e)                 # [E]
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[eid_s].astype(jnp.int32)
+    keep = rank < cap
+    slot = jnp.where(keep, eid_s * cap + rank, e * cap)  # sentinel row
+
+    rows = jnp.where(keep[:, None], xf[tok_s], 0)
+    buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[slot].add(rows)
+    buf3 = buf[: e * cap].reshape(e, cap, d)
+    hg = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf3, p["wg"]))
+    hu = jnp.einsum("ecd,edf->ecf", buf3, p["wu"])
+    ho = jnp.einsum("ecf,efd->ecd", hg * hu, p["wd"])    # [E,cap,D]
+    out_rows = jnp.concatenate(
+        [ho.reshape(e * cap, d), jnp.zeros((1, d), ho.dtype)], axis=0)
+    vals = jnp.where(keep, gate_s, 0.0)[:, None].astype(x.dtype) * out_rows[slot]
+    out = jnp.zeros((t, d), x.dtype).at[tok_s].add(vals)
+    if cfg.n_shared_experts:
+        out = out + _apply_ffn(cfg, p["shared"], xf)
+    # Switch-style load-balance aux loss
+    me = gates.mean(0)
+    frac = counts.astype(jnp.float32) / max(1, t * k)
+    aux = (me * frac).sum() * e
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _dp_only_spec(act_spec, dp: tuple[str, ...], rank: int = 3):
+    """Strip non-dp axes from an activation spec (partial-manual shard_map
+    in_specs may only name manual axes)."""
+    from jax.sharding import PartitionSpec as P
+    entries = (list(act_spec) + [None] * rank)[:rank]
+
+    def keep(e):
+        if e is None:
+            return None
+        axes = e if isinstance(e, tuple) else (e,)
+        return e if set(axes) <= set(dp) else None
+
+    return P(*(keep(e) for e in entries))
+
+
+def _moe_dispatch(cfg: ModelConfig, p: dict, h):
+    """MoE entry point.
+
+    - No SpmdCtx (single-device tests): plain whole-batch dispatch.
+    - E % model_axis == 0 (deepseek-class): fully-manual **expert
+      parallelism** — tokens all_to_all to expert owners over 'model',
+      expert weights sharded [E/model, D/data, F] (gathered over 'data'
+      per layer, FSDP-style).
+    - otherwise (mixtral-class): per-dp-group dispatch under
+      partial-manual shard_map; expert FFN dims stay GSPMD-sharded over
+      'model' (tensor-parallel experts).
+    """
+    from .spmd import current_spmd
+    from jax.sharding import PartitionSpec as P
+
+    ctx = current_spmd()
+    if ctx is None or not ctx.moe_group:
+        return _apply_moe(cfg, p, h)
+
+    # Manual dispatch needs the token axes to split evenly over the mesh
+    # axes named in the activation spec; a 1-token decode step against a
+    # sequence-sharded spec (long_500k serve_step) cannot, so it falls back
+    # to whole-batch dispatch under GSPMD (expert weights stay sharded).
+    sizes = dict(ctx.mesh.shape)
+    for dim, ax in zip(h.shape, tuple(ctx.act_spec) + (None,) * h.ndim):
+        axes = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+        n = 1
+        for a in axes:
+            n *= sizes.get(a, 1)
+        if n > 1 and dim % n != 0:
+            return _apply_moe(cfg, p, h)
+
+    dp = ctx.dp_axes
+    m_size = ctx.mesh.shape.get("model", 1)
+    if m_size > 1 and cfg.n_experts % m_size == 0:
+        return _apply_moe_ep(cfg, p, h, ctx)
+
+    act_spec = _dp_only_spec(ctx.act_spec, dp)
+
+    def local(h_blk, p_moe):
+        out, aux = _apply_moe(cfg, p_moe, h_blk)
+        return out, jax.lax.pmean(aux, dp)
+
+    fn = jax.shard_map(local, mesh=ctx.mesh,
+                       in_specs=(act_spec, P()),
+                       out_specs=(act_spec, P()),
+                       axis_names=set(dp))
+    return fn(h, p)
+
+
+def _apply_moe_ep(cfg: ModelConfig, p: dict, x, ctx,
+                  capacity_factor: float = 1.25):
+    """Fully-manual expert-parallel MoE (GShard-style 2D: DP x EP).
+
+    Every device routes its local tokens to expert owners with one
+    ``all_to_all`` over 'model', computes its E/model experts on the
+    received rows (weights gathered over 'data'), and returns results
+    with the reverse ``all_to_all``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = ctx.mesh
+    m_size = mesh.shape["model"]
+    e, k = cfg.n_experts, cfg.top_k
+    e_loc = e // m_size
+    act_spec = P(*(list(ctx.act_spec) + [None] * 3)[:3])
+    data_axes = tuple(a for a in ("data",) if a in mesh.axis_names)
+
+    def local(x_blk, p_moe):
+        b, s, d = x_blk.shape
+        t = b * s
+        xf = x_blk.reshape(t, d)
+        logits = xf.astype(jnp.float32) @ p_moe["router"]
+        gates = jax.nn.softmax(logits, -1)
+        topv, topi = jax.lax.top_k(gates, k)
+        topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+        cap = max(1, int(t * k / e * capacity_factor))
+
+        eid = topi.reshape(-1)
+        gate = topv.reshape(-1)
+        tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+        order = jnp.argsort(eid, stable=True)
+        eid_s, tok_s, gate_s = eid[order], tok[order], gate[order]
+        counts = jnp.bincount(eid, length=e)
+        starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                  jnp.cumsum(counts)[:-1]])
+        rank = (jnp.arange(t * k, dtype=jnp.int32)
+                - starts[eid_s].astype(jnp.int32))
+        keep = rank < cap
+        slot = jnp.where(keep, eid_s * cap + rank, e * cap)
+        rows = jnp.where(keep[:, None], xf[tok_s], 0)
+        buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[slot].add(rows)
+
+        # ship rows to expert owners: [m, E_loc*cap, D] over 'model'
+        send = buf[: e * cap].reshape(m_size, e_loc * cap, d)
+        recv = jax.lax.all_to_all(send, "model", split_axis=0,
+                                  concat_axis=0, tiled=True)
+        rows_by_e = recv.reshape(m_size, e_loc, cap, d).transpose(
+            1, 0, 2, 3).reshape(e_loc, m_size * cap, d)
+
+        # FSDP gather of this group's expert weights over 'data'
+        wg = p_moe["wg"]
+        wu = p_moe["wu"]
+        wd = p_moe["wd"]
+        if data_axes:
+            wg = jax.lax.all_gather(wg, data_axes, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, data_axes, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, data_axes, axis=2, tiled=True)
+        hg = jax.nn.silu(jnp.einsum("egd,edf->egf", rows_by_e, wg))
+        hu = jnp.einsum("egd,edf->egf", rows_by_e, wu)
+        ho = jnp.einsum("egf,efd->egd", hg * hu, wd)
+
+        back = ho.reshape(e_loc, m_size, cap, d).transpose(1, 0, 2, 3)
+        back = back.reshape(m_size, e_loc * cap, d)
+        got = jax.lax.all_to_all(back, "model", split_axis=0,
+                                 concat_axis=0, tiled=True)
+        out_rows = jnp.concatenate(
+            [got.reshape(e * cap, d), jnp.zeros((1, d), got.dtype)], axis=0)
+        vals = (jnp.where(keep, gate_s, 0.0)[:, None].astype(x_blk.dtype)
+                * out_rows[slot])
+        out = jnp.zeros((t, d), x_blk.dtype).at[tok_s].add(vals)
+
+        if cfg.n_shared_experts:
+            # hand-written tensor-parallel shared expert (F over 'model')
+            sh = p_moe["shared"]
+            hg_s = jax.nn.silu(xf @ sh["wg"]) * (xf @ sh["wu"])
+            out = out + jax.lax.psum(hg_s @ sh["wd"], "model")
+
+        me = gates.mean(0)
+        frac = counts.astype(jnp.float32) / max(1, t * k)
+        aux = (me * frac).sum() * e
+        # aux only varies over the axes named in act_spec (it is a pure
+        # function of x_blk and the replicated router); pvary the rest so
+        # the full-mesh pmean type-checks under shard_map's VMA rules.
+        named = set()
+        for ax in tuple(act_spec):
+            if ax is not None:
+                named.update(ax if isinstance(ax, tuple) else (ax,))
+        missing = tuple(a for a in mesh.axis_names if a not in named)
+        if missing:
+            aux = jax.lax.pvary(aux, missing)
+        aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
+        return out.reshape(b, s, d), aux
+
+    router_spec = P()
+    w_in_spec = P("model", "data" if data_axes else None, None)
+    wd_spec = P("model", None, "data" if data_axes else None)
+    shared_spec = {"wg": P(None, "model"), "wu": P(None, "model"),
+                   "wd": P("model", None)} if cfg.n_shared_experts else None
+    p_specs = {"router": router_spec, "wg": w_in_spec, "wu": w_in_spec,
+               "wd": wd_spec}
+    if shared_spec:
+        p_specs["shared"] = shared_spec
+    # When act_spec leaves some mesh axis unused (decode: tokens are
+    # replicated over 'model'), every rank along that axis computes the
+    # identical dispatch, so the output IS replicated — but the VMA system
+    # cannot infer that through all_to_all; disable the static check then.
+    named = set()
+    for ax in tuple(act_spec):
+        if ax is not None:
+            named.update(ax if isinstance(ax, tuple) else (ax,))
+    covers_mesh = named >= set(mesh.axis_names)
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(act_spec, p_specs),
+                       out_specs=(act_spec, P()),
+                       axis_names=set(mesh.axis_names),
+                       check_vma=covers_mesh)
+    return fn(x, p)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM / sLSTM / hybrid sub-blocks
+# ---------------------------------------------------------------------------
+
+def _init_mlstm(key, cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, _dtype(cfg)
+    di = d * cfg.ssm_expand
+    ks = jax.random.split(key, 6)
+    return {"wq": normal_init(ks[0], (d, di), dtype=dt),
+            "wk": normal_init(ks[1], (d, di), dtype=dt),
+            "wv": normal_init(ks[2], (d, di), dtype=dt),
+            "wz": normal_init(ks[3], (d, di), dtype=dt),
+            "wif": normal_init(ks[4], (d, 2 * cfg.n_heads), dtype=jnp.float32),
+            "wd": normal_init(ks[5], (di, d), dtype=dt)}
+
+
+def _apply_mlstm(cfg: ModelConfig, p: dict, x, cache):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = d * cfg.ssm_expand
+    dh = di // h
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, h, dh)
+    v = (x @ p["wv"]).reshape(b, s, h, dh)
+    gif = x.astype(jnp.float32) @ p["wif"]
+    ig, fg = gif[..., :h], gif[..., h:]
+    state = cache if cache is not None else None
+    chunk = 1 if (cache is not None and s == 1) else 128
+    y, st = mlstm_chunked(q, k, v, ig, fg, state=state, chunk=chunk)
+    y = y.reshape(b, s, di) * jax.nn.silu(x @ p["wz"])
+    out = (y @ p["wd"]).astype(x.dtype)
+    return out, (st if cache is not None else None)
+
+
+def _init_slstm(key, cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, _dtype(cfg)
+    h = cfg.n_heads
+    dh = d // h
+    k1, k2 = jax.random.split(key)
+    return {"wg": normal_init(k1, (d, 4 * d), dtype=jnp.float32),
+            "r": normal_init(k2, (h, 4, dh, dh), stddev=0.05,
+                             dtype=jnp.float32)}
+
+
+def _apply_slstm(cfg: ModelConfig, p: dict, x, cache):
+    b, s, d = x.shape
+    gx = x.astype(jnp.float32) @ p["wg"]
+    if cache is not None and s == 1:
+        y, st = slstm_step(cache, gx[:, 0], p["r"], cfg.n_heads)
+        return y[:, None].astype(x.dtype), st
+    y, st = slstm_scan(gx, p["r"], cfg.n_heads, state=cache)
+    return y.astype(x.dtype), (st if cache is not None else None)
+
+
+def _init_mamba(key, cfg: ModelConfig) -> dict:
+    d, dt = cfg.d_model, _dtype(cfg)
+    di = d * cfg.ssm_expand
+    n = cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 7)
+    a_init = jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None],
+                              (di, 1)))
+    return {"win": normal_init(ks[0], (d, 2 * di), dtype=dt),
+            "conv": normal_init(ks[1], (cfg.ssm_conv, di), dtype=dt),
+            "conv_b": zeros_init(ks[2], (di,), dt),
+            "wbc": normal_init(ks[3], (di, 2 * n), dtype=dt),
+            "wdt1": normal_init(ks[4], (di, dt_rank), dtype=dt),
+            "wdt2": normal_init(ks[5], (dt_rank, di), dtype=dt),
+            "dt_b": jnp.full((di,), -4.6, jnp.float32),   # softplus ~ 0.01
+            "a_log": a_init,
+            "d_skip": jnp.ones((di,), jnp.float32),
+            "wout": normal_init(ks[6], (di, d), dtype=dt)}
+
+
+def _causal_conv(x, kernel, bias, conv_state=None):
+    """Depthwise causal conv1d.  x [B,S,DI], kernel [CW,DI]."""
+    cw = kernel.shape[0]
+    if conv_state is not None:
+        ctx = jnp.concatenate([conv_state, x], axis=1)    # [B,CW-1+S,DI]
+    else:
+        ctx = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(ctx[:, i:i + x.shape[1]] * kernel[i] for i in range(cw))
+    new_state = ctx[:, -(cw - 1):] if cw > 1 else ctx[:, :0]
+    return out + bias, new_state
+
+
+def _apply_mamba(cfg: ModelConfig, p: dict, x, cache):
+    b, s, d = x.shape
+    di = d * cfg.ssm_expand
+    n = cfg.ssm_state
+    xz = x @ p["win"]
+    xi, z = xz[..., :di], xz[..., di:]
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xi, p["conv"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    if _bsp_active() and s > 1:
+        # block-SP: the selective scan's recurrence is elementwise in DI, so
+        # pin every scan input to a seq-FULL, DI-over-'model' layout — the
+        # 4096-step time loop then runs with zero per-step collectives.
+        from jax.sharding import PartitionSpec as P
+        dspec = P(_bsp_dp(), None, "model")
+        xc = _constrain_to(xc, dspec)
+        z = _constrain_to(z, dspec)
+    bc = xc @ p["wbc"]
+    b_in, c_in = bc[..., :n], bc[..., n:]
+    delta = jax.nn.softplus((xc @ p["wdt1"]) @ p["wdt2"]
+                            + p["dt_b"]).astype(jnp.float32)
+    if _bsp_active() and s > 1:
+        from jax.sharding import PartitionSpec as P
+        dspec = P(_bsp_dp(), None, "model")
+        rspec = P(_bsp_dp(), None, None)
+        delta = _constrain_to(delta, dspec)
+        b_in = _constrain_to(b_in, rspec)
+        c_in = _constrain_to(c_in, rspec)
+    if cache is not None and s == 1:
+        y, h = selective_scan_step(cache["h"], xc[:, 0], delta[:, 0],
+                                   p["a_log"], b_in[:, 0], c_in[:, 0],
+                                   p["d_skip"])
+        y = y[:, None]
+    else:
+        h0 = cache["h"] if cache is not None else None
+        y, h = selective_scan(xc, delta, p["a_log"], b_in, c_in,
+                              p["d_skip"], h0=h0)
+    y = y * jax.nn.silu(z)
+    out = (y @ p["wout"]).astype(x.dtype)
+    new_cache = ({"h": h, "conv": new_conv} if cache is not None else None)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Block assembly
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    if kind == "attn_dense":
+        return {"norm1": _norm_params(d), "attn": _init_attn(ks[0], cfg),
+                "norm2": _norm_params(d),
+                "ffn": _init_ffn(ks[1], cfg, cfg.d_ff)}
+    if kind == "attn_moe":
+        return {"norm1": _norm_params(d), "attn": _init_attn(ks[0], cfg),
+                "norm2": _norm_params(d), "moe": _init_moe(ks[1], cfg)}
+    if kind == "mlstm":
+        return {"norm1": _norm_params(d), "mlstm": _init_mlstm(ks[0], cfg)}
+    if kind == "slstm":
+        return {"norm1": _norm_params(d), "slstm": _init_slstm(ks[0], cfg)}
+    if kind == "hybrid":
+        return {"norm1": _norm_params(d), "attn": _init_attn(ks[0], cfg),
+                "mamba": _init_mamba(ks[1], cfg),
+                "norm2": _norm_params(d),
+                "ffn": _init_ffn(ks[2], cfg, cfg.d_ff)}
+    raise ValueError(kind)
+
+
+def apply_block(cfg: ModelConfig, kind: str, p: dict, x, positions,
+                cache=None, pos=None):
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn_dense", "attn_moe"):
+        a, c_attn = _apply_attn(cfg, p["attn"], norm_apply(cfg, p["norm1"], x),
+                                positions, cache, pos)
+        x = x + a
+        h = norm_apply(cfg, p["norm2"], x)
+        if kind == "attn_dense":
+            x = x + _apply_ffn(cfg, p["ffn"], h)
+        else:
+            mo, aux = _moe_dispatch(cfg, p["moe"], h)
+            x = x + mo
+        return x, c_attn, aux
+    if kind == "mlstm":
+        y, st = _apply_mlstm(cfg, p["mlstm"], norm_apply(cfg, p["norm1"], x),
+                             cache)
+        return x + y, st, aux
+    if kind == "slstm":
+        y, st = _apply_slstm(cfg, p["slstm"], norm_apply(cfg, p["norm1"], x),
+                             cache)
+        return x + y, st, aux
+    if kind == "hybrid":
+        h = norm_apply(cfg, p["norm1"], x)
+        c_attn = cache["attn"] if cache is not None else None
+        c_ssm = cache["ssm"] if cache is not None else None
+        a, c_attn2 = _apply_attn(cfg, p["attn"], h, positions, c_attn, pos)
+        m, c_ssm2 = _apply_mamba(cfg, p["mamba"], h, c_ssm)
+        x = x + 0.5 * (a + m)
+        x = x + _apply_ffn(cfg, p["ffn"], norm_apply(cfg, p["norm2"], x))
+        new_cache = ({"attn": c_attn2, "ssm": c_ssm2}
+                     if cache is not None else None)
+        return x, new_cache, aux
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    """Zeroed decode cache for one block."""
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    di = d * cfg.ssm_expand
+
+    def attn_cache():
+        if cfg.use_mla:
+            return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dt),
+                    "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dt)}
+        w = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+        return {"k": jnp.zeros((batch, w, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((batch, w, cfg.n_kv_heads, hd), dt),
+                "pos": jnp.full((batch, w), -1, jnp.int32)}
+
+    if kind in ("attn_dense", "attn_moe"):
+        return attn_cache()
+    if kind == "mlstm":
+        h = cfg.n_heads
+        dh = di // h
+        return MlstmState(c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+                          n=jnp.zeros((batch, h, dh), jnp.float32))
+    if kind == "slstm":
+        z = jnp.zeros((batch, d), jnp.float32)
+        return SlstmState(c=z, n=z, h=z, m=z)
+    if kind == "hybrid":
+        return {"attn": attn_cache(),
+                "ssm": {"h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+                        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dt)}}
+    raise ValueError(kind)

@@ -1,0 +1,163 @@
+"""Model assembly: embedding -> block runs (lax.scan) -> LM head.
+
+Entry points:
+- ``init_model(key, cfg)``            parameter pytree
+- ``forward(cfg, params, batch)``     train/prefill logits
+- ``train_step_fn(cfg, opt)``         jit-able (params, opt_state, batch) step
+- ``init_decode_cache(cfg, B, S)``    stacked per-run caches
+- ``serve_step(cfg, params, cache, tokens, pos)``  one-token decode
+
+Layers of the same kind are stacked and executed with ``lax.scan`` so the
+61-layer DeepSeek config lowers as a handful of loops, not 61 inlined
+blocks.  ``cfg.remat`` wraps the scan body in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import normal_init
+from .blocks import init_block, apply_block, init_block_cache, norm_apply
+from .config import ModelConfig
+from .spmd import constrain
+
+__all__ = ["init_model", "forward", "loss_fn", "train_step_fn",
+           "init_decode_cache", "serve_step", "param_count"]
+
+
+def _stack_trees(trees: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    params: dict[str, Any] = {
+        "embed": normal_init(keys[0], (cfg.padded_vocab, cfg.d_model),
+                             dtype=dt),
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(keys[1], (cfg.d_model,
+                                                  cfg.padded_vocab), dtype=dt)
+    runs = []
+    for kind, start, length in cfg.block_runs():
+        layers = [init_block(keys[3 + start + i], cfg, kind)
+                  for i in range(length)]
+        runs.append(_stack_trees(layers))
+    params["runs"] = runs
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count via shape-only evaluation (no allocation)."""
+    shapes = jax.eval_shape(lambda k: init_model(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def _embed(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    x = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model)).astype(
+        jnp.dtype(cfg.dtype))
+    if cfg.vision_tokens and "patches" in batch:
+        # VLM stub carve-out: pre-computed patch embeddings are prepended.
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward.  Returns (logits [B,S,Vpad], aux_loss)."""
+    x = _embed(cfg, params, batch)
+    x = constrain(x)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    aux_total = jnp.zeros((), jnp.float32)
+    for run_params, (kind, start, length) in zip(params["runs"],
+                                                 cfg.block_runs()):
+        def body(carry, p_layer, _kind=kind):
+            h, aux = carry
+            h2, _, aux_l = apply_block(cfg, _kind, p_layer, h, positions)
+            h2 = constrain(h2)
+            return (h2, aux + aux_l), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), run_params)
+    x = norm_apply(cfg, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head
+    logits = constrain(logits, "logits")
+    return logits, aux_total
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> tuple[jnp.ndarray, dict]:
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    if cfg.vision_tokens and "patches" in batch:
+        logits = logits[:, batch["patches"].shape[1]:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                               -1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        loss = nll.mean()
+    else:
+        loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def train_step_fn(cfg: ModelConfig, opt):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        params2, opt_state2 = opt.update(grads, opt_state, params)
+        return params2, opt_state2, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int) -> list:
+    """Per-run stacked caches."""
+    caches = []
+    for kind, start, length in cfg.block_runs():
+        layer_caches = [init_block_cache(cfg, kind, batch, max_len)
+                        for _ in range(length)]
+        caches.append(_stack_trees(layer_caches))
+    return caches
+
+
+def serve_step(cfg: ModelConfig, params, caches: list, tokens: jnp.ndarray,
+               pos: jnp.ndarray):
+    """Decode one token.  tokens [B,1] int32, pos scalar int32 (current
+    position = number of tokens already in the cache).
+    Returns (logits [B, Vpad], new caches)."""
+    x = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model)).astype(
+        jnp.dtype(cfg.dtype))
+    x = constrain(x)
+    new_caches = []
+    for run_params, run_cache, (kind, start, length) in zip(
+            params["runs"], caches, cfg.block_runs()):
+        def body(h, layer, _kind=kind):
+            p_layer, c_layer = layer
+            h2, c2, _ = apply_block(cfg, _kind, p_layer, h, None,
+                                    cache=c_layer, pos=pos)
+            return constrain(h2), c2
+
+        x, updated = jax.lax.scan(body, x, (run_params, run_cache))
+        new_caches.append(updated)
+    x = norm_apply(cfg, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ head)[:, 0]
+    return logits, new_caches

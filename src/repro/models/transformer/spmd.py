@@ -1,0 +1,83 @@
+"""SPMD context for the transformer zoo.
+
+The model code is mesh-agnostic; the launcher installs an :class:`SpmdCtx`
+that tells it (a) how activations are sharded (so it can place
+``with_sharding_constraint`` hints) and (b) which axes are data-parallel
+(so the MoE dispatch can run in a partial-manual ``shard_map`` group —
+GShard-style per-group capacity instead of an infeasible global dispatch
+tensor).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["SpmdCtx", "use_spmd", "current_spmd", "constrain"]
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmdCtx:
+    mesh: Mesh
+    dp_axes: tuple[str, ...]            # axes sharding tokens (batch or seq)
+    act_spec: P                         # PartitionSpec for [B, S, D] hiddens
+    logits_spec: Optional[P] = None     # for [B, S, V] logits
+    moe_group: bool = True              # run MoE dispatch per dp group
+    # Block-level sequence parallelism (§Perf): residuals stay seq-sharded
+    # between blocks, but q/k/v (and SSM internals) are constrained to a
+    # seq-FULL, head-(or channel-)sharded layout ONCE per block, so the
+    # flash-attention chunk loops and recurrent scans run with zero
+    # per-iteration collectives (one all-gather in, one reduce-scatter out).
+    block_sp: bool = False
+
+
+def use_spmd(ctx: Optional[SpmdCtx]):
+    @contextlib.contextmanager
+    def cm():
+        prev = getattr(_state, "ctx", None)
+        _state.ctx = ctx
+        try:
+            yield ctx
+        finally:
+            _state.ctx = prev
+    return cm()
+
+
+def current_spmd() -> Optional[SpmdCtx]:
+    return getattr(_state, "ctx", None)
+
+
+def constrain(x, spec_name: str = "act"):
+    """Apply a sharding constraint if a ctx is installed (no-op otherwise)."""
+    ctx = current_spmd()
+    if ctx is None:
+        return x
+    spec = ctx.act_spec if spec_name == "act" else ctx.logits_spec
+    if spec is None:
+        return x
+    # trim spec to rank
+    spec = P(*(list(spec) + [None] * x.ndim)[: x.ndim])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_to(x, spec: P):
+    """Explicit-spec constraint (no-op without a ctx)."""
+    if current_spmd() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def block_sp_active() -> bool:
+    ctx = current_spmd()
+    return bool(ctx is not None and ctx.block_sp)
+
+
+def block_sp_dp() -> tuple[str, ...]:
+    ctx = current_spmd()
+    return ctx.dp_axes if ctx is not None else ()

@@ -1,0 +1,236 @@
+"""SSM / recurrent primitives: chunked mLSTM, Mamba selective scan, sLSTM.
+
+TPU adaptation notes (DESIGN.md §2):
+
+- **mLSTM** (xLSTM): decay is a *scalar per head per step*, so the
+  chunkwise-parallel dual form applies — intra-chunk work is a masked,
+  decay-weighted q@k^T (MXU-friendly [c, c] tiles), inter-chunk state
+  ``C [H, dh, dh]`` is carried by a short ``lax.scan`` over chunks.
+  Compute O(S*c + S*dh) per head-dim, sub-quadratic in S for fixed c.
+- **Mamba** selective scan: decay is per-channel x per-state (rank-full),
+  so the dual form would need [c, c, d_inner] temporaries; we use the
+  sequential ``lax.scan`` over time (one XLA while-loop, small carried
+  state [B, d_inner, N]) — the TPU analogue of the CUDA selective-scan
+  kernel's recurrence, chosen over associative_scan whose [B,S,d,N]
+  materialisation cannot fit HBM at the assigned shapes.
+- **sLSTM** has head-block recurrent matrices R (h_{t-1} feeds the gates),
+  which is inherently sequential — faithful ``lax.scan``.
+
+All scans are causal and expose a (state-in, state-out) interface so decode
+reuses the same cell code with a 1-step scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MlstmState", "mlstm_chunked", "mlstm_step", "selective_scan",
+           "selective_scan_step", "SlstmState", "slstm_scan", "slstm_step"]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (chunkwise-parallel linear attention with scalar per-head gates)
+# ---------------------------------------------------------------------------
+
+class MlstmState(NamedTuple):
+    c: jnp.ndarray   # [B, H, dk, dv] matrix memory
+    n: jnp.ndarray   # [B, H, dk]     normalizer
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, state: MlstmState | None = None,
+                  chunk: int = 128):
+    """q/k/v [B,S,H,dh]; i_gate/f_gate [B,S,H] (pre-activations).
+
+    f = sigmoid(f_gate) (log-decay <= 0), i = exp(clip(i_gate)) per the
+    xLSTM exponential input gate (clipped for stability; the |q.n|
+    denominator provides the scale normalisation).
+    Returns (y [B,S,H,dh], final MlstmState).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, z4)
+        k = jnp.pad(k, z4)
+        v = jnp.pad(v, z4)
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad), (0, 0)))
+        f_gate = jnp.pad(f_gate, ((0, 0), (0, pad), (0, 0)),
+                         constant_values=30.0)  # f=1 for padding
+    sp = q.shape[1]
+    n_chunks = sp // c
+    scale = 1.0 / jnp.sqrt(dk).astype(jnp.float32)
+
+    lf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))    # [B,S,H] <= 0
+    li = jnp.clip(i_gate.astype(jnp.float32), -20.0, 10.0)
+
+    def r(x, width):
+        return x.reshape(b, n_chunks, c, *x.shape[2:]).transpose(
+            1, 0, *range(2, x.ndim + 1))
+
+    q_r = q.reshape(b, n_chunks, c, h, dk).transpose(1, 0, 3, 2, 4)  # [n,B,H,c,dk]
+    k_r = k.reshape(b, n_chunks, c, h, dk).transpose(1, 0, 3, 2, 4)
+    v_r = v.reshape(b, n_chunks, c, h, dv).transpose(1, 0, 3, 2, 4)
+    lf_r = lf.reshape(b, n_chunks, c, h).transpose(1, 0, 3, 2)       # [n,B,H,c]
+    li_r = li.reshape(b, n_chunks, c, h).transpose(1, 0, 3, 2)
+
+    if state is None:
+        state = MlstmState(
+            c=jnp.zeros((b, h, dk, dv), jnp.float32),
+            n=jnp.zeros((b, h, dk), jnp.float32))
+
+    def chunk_step(carry, inp):
+        c0, n0 = carry
+        qb, kb, vb, lfb, lib = inp            # [B,H,c,*]
+        lf_cum = jnp.cumsum(lfb, axis=-1)     # [B,H,c] log prod f up to t
+        # intra-chunk: D[t,i] = exp(lf_cum[t] - lf_cum[i]) for i <= t
+        dmat = lf_cum[..., :, None] - lf_cum[..., None, :]
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        wts = jnp.where(causal, jnp.exp(dmat + lib[..., None, :]), 0.0)
+        sc = jnp.einsum("bhtd,bhid->bhti", qb.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * scale
+        sc = sc * wts
+        y_intra = jnp.einsum("bhti,bhiv->bhtv", sc, vb.astype(jnp.float32))
+        n_intra = jnp.einsum("bhti,bhid->bhtd", wts,
+                             kb.astype(jnp.float32)) * scale
+        # inter-chunk: decayed read of carried state
+        decay_t = jnp.exp(lf_cum)             # [B,H,c]
+        y_inter = jnp.einsum("bhtd,bhdv->bhtv", qb.astype(jnp.float32),
+                             c0) * decay_t[..., None] * scale
+        n_inter = jnp.einsum("bhtd,bhd->bht", qb.astype(jnp.float32),
+                             n0) * decay_t * scale
+        denom_intra = jnp.einsum("bhtd,bhtd->bht", qb.astype(jnp.float32),
+                                 n_intra)
+        denom = jnp.abs(denom_intra + n_inter)
+        y = (y_intra + y_inter) / jnp.maximum(denom, 1.0)[..., None]
+        # state update
+        total = lf_cum[..., -1]               # [B,H]
+        wts_end = jnp.exp(total[..., None] - lf_cum + lib)   # [B,H,c]
+        kv = jnp.einsum("bhid,bhiv->bhdv",
+                        kb.astype(jnp.float32) * wts_end[..., None],
+                        vb.astype(jnp.float32))
+        c1 = c0 * jnp.exp(total)[..., None, None] + kv
+        n1 = n0 * jnp.exp(total)[..., None] + jnp.einsum(
+            "bhid,bhi->bhd", kb.astype(jnp.float32), wts_end)
+        return (c1, n1), y
+
+    (c_f, n_f), ys = jax.lax.scan(chunk_step, (state.c, state.n),
+                                  (q_r, k_r, v_r, lf_r, li_r))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, sp, h, dv)[:, :s]
+    return y.astype(q.dtype), MlstmState(c=c_f, n=n_f)
+
+
+def mlstm_step(state: MlstmState, q, k, v, i_gate, f_gate):
+    """Single decode step.  q/k/v [B,1,H,dh], gates [B,1,H]."""
+    y, st = mlstm_chunked(q, k, v, i_gate, f_gate, state=state, chunk=1)
+    return y, st
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective scan
+# ---------------------------------------------------------------------------
+
+def selective_scan(x, delta, a_log, b_in, c_in, d_skip,
+                   h0: jnp.ndarray | None = None):
+    """Mamba S4D-real selective scan (sequential lax.scan over time).
+
+    x      [B,S,DI]      input (post conv+silu)
+    delta  [B,S,DI]      softplus'd step sizes
+    a_log  [DI,N]        A = -exp(a_log)
+    b_in   [B,S,N]
+    c_in   [B,S,N]
+    d_skip [DI]
+    h0     [B,DI,N] carried state (zeros if None)
+    Returns (y [B,S,DI], h_final).
+    """
+    bsz, s, di = x.shape
+    n = a_log.shape[1]
+    a = -jnp.exp(a_log.astype(jnp.float32))           # [DI,N]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+
+    xs = x.astype(jnp.float32).transpose(1, 0, 2)     # [S,B,DI]
+    ds = delta.astype(jnp.float32).transpose(1, 0, 2)
+    bs = b_in.astype(jnp.float32).transpose(1, 0, 2)  # [S,B,N]
+    cs = c_in.astype(jnp.float32).transpose(1, 0, 2)
+
+    def step(h, inp):
+        xt, dt, bt, ct = inp
+        decay = jnp.exp(dt[..., None] * a)            # [B,DI,N]
+        h = h * decay + (dt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h_f, ys = jax.lax.scan(step, h0, (xs, ds, bs, cs))
+    y = ys.transpose(1, 0, 2) + x.astype(jnp.float32) * d_skip
+    return y.astype(x.dtype), h_f
+
+
+def selective_scan_step(h, xt, dt, a_log, bt, ct, d_skip):
+    """One decode step: xt/dt [B,DI], bt/ct [B,N], h [B,DI,N]."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)
+    h = h * decay + (dt * xt).astype(jnp.float32)[..., None] * bt[:, None, :].astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, ct.astype(jnp.float32))
+    y = y + xt.astype(jnp.float32) * d_skip
+    return y.astype(xt.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, exponential gating, block-diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+class SlstmState(NamedTuple):
+    c: jnp.ndarray   # [B, D]
+    n: jnp.ndarray   # [B, D]
+    h: jnp.ndarray   # [B, D]
+    m: jnp.ndarray   # [B, D] stabilizer
+
+
+def _slstm_cell(state: SlstmState, gates_x, r_blocks, n_heads):
+    """gates_x [B, 4D] = W x_t + b (z,i,f,o pre-acts before recurrence)."""
+    c0, n0, h0, m0 = state
+    bsz, d = c0.shape
+    dh = d // n_heads
+    h_heads = h0.reshape(bsz, n_heads, dh)
+    rec = jnp.einsum("bhd,hgde->bhge", h_heads, r_blocks)   # [B,H,4,dh]
+    rec = rec.transpose(0, 2, 1, 3).reshape(bsz, 4 * d)
+    z_, i_, f_, o_ = jnp.split(gates_x + rec, 4, axis=-1)
+    z = jnp.tanh(z_)
+    o = jax.nn.sigmoid(o_)
+    # stabilized exponential gating (xLSTM eq. 15-17)
+    log_f = jax.nn.log_sigmoid(f_)
+    m1 = jnp.maximum(log_f + m0, i_)
+    i = jnp.exp(i_ - m1)
+    f = jnp.exp(log_f + m0 - m1)
+    c1 = f * c0 + i * z
+    n1 = f * n0 + i
+    h1 = o * (c1 / jnp.maximum(n1, 1.0))
+    return SlstmState(c=c1, n=n1, h=h1, m=m1)
+
+
+def slstm_scan(gates_x, r_blocks, n_heads: int,
+               state: SlstmState | None = None):
+    """gates_x [B,S,4D]; r_blocks [H,4,dh,dh].  Returns (h [B,S,D], state)."""
+    bsz, s, d4 = gates_x.shape
+    d = d4 // 4
+    if state is None:
+        z = jnp.zeros((bsz, d), jnp.float32)
+        state = SlstmState(c=z, n=z, h=z, m=z)
+
+    def step(st, gx):
+        st1 = _slstm_cell(st, gx, r_blocks, n_heads)
+        return st1, st1.h
+
+    state_f, hs = jax.lax.scan(step, state,
+                               gates_x.astype(jnp.float32).transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2).astype(gates_x.dtype), state_f
+
+
+def slstm_step(state: SlstmState, gates_x, r_blocks, n_heads: int):
+    """One decode step: gates_x [B, 4D]."""
+    st = _slstm_cell(state, gates_x.astype(jnp.float32), r_blocks, n_heads)
+    return st.h.astype(gates_x.dtype), st

@@ -1,0 +1,26 @@
+"""Parameter initializers (pure functions over PRNG keys)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["glorot", "he", "normal_init", "zeros_init"]
+
+
+def glorot(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[-2], shape[-1]
+    scale = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def he(key, shape, dtype=jnp.float32):
+    fan_in = shape[-2]
+    return jax.random.normal(key, shape, dtype) * jnp.sqrt(2.0 / fan_in)
+
+
+def normal_init(key, shape, stddev=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * stddev
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)

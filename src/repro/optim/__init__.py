@@ -1,0 +1,3 @@
+from .optimizers import Optimizer, sgd, adam, adamw, clip_by_global_norm
+
+__all__ = ["Optimizer", "sgd", "adam", "adamw", "clip_by_global_norm"]

@@ -1,0 +1,83 @@
+"""Hand-rolled pytree optimizers (SGD / Adam / AdamW) + grad utilities."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adam", "adamw", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """(init, update) pair; update returns (new_params, new_state)."""
+    init: Callable
+    update: Callable
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step=None):
+        del step
+        if momentum == 0.0:
+            new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+            return new_params, ()
+        new_vel = jax.tree.map(lambda v, g: momentum * v + g, state, grads)
+        new_params = jax.tree.map(lambda p, v: p - lr * v, params, new_vel)
+        return new_params, new_vel
+
+    return Optimizer(init, update)
+
+
+class _AdamState(NamedTuple):
+    mu: object
+    nu: object
+    count: jnp.ndarray
+
+
+def _adam_like(lr, b1, b2, eps, weight_decay) -> Optimizer:
+    def init(params):
+        return _AdamState(mu=jax.tree.map(jnp.zeros_like, params),
+                          nu=jax.tree.map(jnp.zeros_like, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, step=None):
+        count = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, m, v):
+            step_ = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                step_ = step_ + lr * weight_decay * p
+            return p - step_
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, _AdamState(mu, nu, count)
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+         ) -> Optimizer:
+    return _adam_like(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    return _adam_like(lr, b1, b2, eps, weight_decay)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm

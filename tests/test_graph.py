@@ -1,0 +1,103 @@
+"""Graph substrate: CSR invariants, partitioners, halo construction."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (csr_from_edges, symmetric_normalize, rmat, sbm,
+                         random_partition, fennel_partition, metis_partition,
+                         build_partition, edge_cut, bfs_order)
+
+
+@st.composite
+def small_graph(draw):
+    n = draw(st.integers(4, 40))
+    m = draw(st.integers(n, 6 * n))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    return csr_from_edges(src[keep], dst[keep], n, dedup=True)
+
+
+@given(small_graph())
+@settings(max_examples=30, deadline=None)
+def test_csr_roundtrip(g):
+    src, dst = g.edges()
+    g2 = csr_from_edges(src, dst, g.num_nodes)
+    assert np.array_equal(g.indptr, g2.indptr)
+    assert np.array_equal(g.indices, g2.indices)
+    assert g.out_degree().sum() == g.num_edges
+    assert g.in_degree().sum() == g.num_edges
+
+
+@given(small_graph(), st.integers(2, 5), st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_partition_invariants(g, parts, hops):
+    assign = random_partition(g, parts, seed=0)
+    ps = build_partition(g, assign, hops=hops)
+    # every vertex is inner in exactly one partition
+    counts = np.zeros(g.num_nodes, dtype=int)
+    for p in ps.parts:
+        counts[p.inner_nodes] += 1
+        # halo sets are disjoint from inner, owners are correct
+        assert not set(p.inner_nodes) & set(p.halo_nodes)
+        assert np.all(assign[p.halo_nodes] == p.halo_owner)
+        assert np.all(p.halo_owner != p.part_id)
+    assert np.all(counts == 1)
+    # edge conservation: every edge into an inner vertex whose src is within
+    # `hops` appears in exactly one local graph (hops=1 covers all edges)
+    if hops >= 1:
+        total_local = sum(p.local_graph.num_edges for p in ps.parts)
+        assert total_local == g.num_edges
+
+
+def test_partitioners_cut_quality():
+    g = rmat(1500, 9000, seed=3)
+    cut_r = edge_cut(g, random_partition(g, 4, seed=0))
+    cut_f = edge_cut(g, fennel_partition(g, 4, seed=0))
+    cut_m = edge_cut(g, metis_partition(g, 4, seed=0))
+    # structure-aware partitioners must beat random
+    assert cut_f < cut_r
+    assert cut_m < cut_r
+
+
+def test_weighted_partition_sizes():
+    g = rmat(2000, 10000, seed=1)
+    w = [0.4, 0.4, 0.1, 0.1]
+    a = fennel_partition(g, 4, seed=0, weights=w)
+    sizes = np.bincount(a, minlength=4) / g.num_nodes
+    assert sizes[0] > sizes[2]
+    assert sizes[1] > sizes[3]
+
+
+def test_symmetric_normalize_weights():
+    g = rmat(300, 2000, seed=0)
+    gn = symmetric_normalize(g)
+    assert gn.edge_weight is not None
+    assert np.all(gn.edge_weight > 0)
+    assert np.all(np.isfinite(gn.edge_weight))
+
+
+def test_bfs_order_is_permutation():
+    g = rmat(500, 2500, seed=2)
+    order = bfs_order(g)
+    assert np.array_equal(np.sort(order), np.arange(g.num_nodes))
+
+
+def test_halo_observation1():
+    """Paper Obs. 1: total halo >= inner for power-law graphs at P>=4."""
+    g = rmat(3000, 24000, seed=0)
+    ps = build_partition(g, random_partition(g, 8, seed=0), hops=1)
+    assert ps.total_halo() >= 0.8 * ps.total_inner()
+
+
+def test_halo_grows_with_hops_and_parts():
+    g = rmat(2000, 12000, seed=0)
+    a = metis_partition(g, 4, seed=0)
+    h1 = build_partition(g, a, hops=1).total_halo()
+    h2 = build_partition(g, a, hops=2).total_halo()
+    assert h2 >= h1
+    a8 = metis_partition(g, 8, seed=0)
+    h8 = build_partition(g, a8, hops=1).total_halo()
+    assert h8 >= h1

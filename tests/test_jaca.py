@@ -1,0 +1,104 @@
+"""JACA unit tests: capacity (Alg. 1), plan tiering (Eq. 2 priority),
+hit-rate claims (Figs. 14-15), byte accounting."""
+import numpy as np
+import pytest
+
+from repro.core import (cal_capacity, build_cache_plan, CacheCapacity,
+                        plan_hit_rate, simulate_policy_hit_rate,
+                        comm_bytes_per_step, PROFILES)
+from repro.graph import rmat, build_partition, metis_partition
+
+
+@pytest.fixture(scope="module")
+def ps():
+    g = rmat(800, 5000, seed=0)
+    return build_partition(g, metis_partition(g, 4, seed=0), hops=1)
+
+
+def test_cal_capacity_respects_memory(ps):
+    profiles = [PROFILES["rtx3090"]] * 4
+    cap = cal_capacity(ps, [64, 32, 32], profiles, m_cpu_gib=0.001,
+                       reserved_cpu_mib=0.0)
+    # tiny CPU budget => tiny global capacity
+    bytes_per_vertex = (64 + 32 + 32) * 4
+    assert cap.c_cpu <= int(0.001 * 1024 ** 3 / bytes_per_vertex)
+    for c, part in zip(cap.c_gpu, ps.parts):
+        assert 0 <= c <= part.n_halo
+
+
+def test_cal_capacity_caps_at_halo_count(ps):
+    profiles = [PROFILES["a40"]] * 4   # 48 GiB: plenty
+    cap = cal_capacity(ps, [16], profiles, m_cpu_gib=64.0)
+    for c, part in zip(cap.c_gpu, ps.parts):
+        assert c == part.n_halo     # never exceeds the candidate set
+
+
+def test_overlap_priority_orders_local_tier(ps):
+    """Local tier must contain the highest-overlap halos (Eq. 2)."""
+    overlap = ps.overlap_ratio()
+    cap = CacheCapacity(c_gpu=[15] * 4, c_cpu=0)
+    plan = build_cache_plan(ps, cap, policy="overlap_high")
+    for w in plan.workers:
+        if w.local_gids.size and w.uncached_gids.size:
+            assert overlap[w.local_gids].min() >= overlap[w.uncached_gids].max() - 1
+
+
+def test_high_beats_low_priority_hit_rate(ps):
+    """Fig. 14: overlap_high >= overlap_low at equal capacity."""
+    for capacity in (10, 40, 120):
+        hi = simulate_policy_hit_rate(ps, capacity, policy="overlap_high")
+        lo = simulate_policy_hit_rate(ps, capacity, policy="overlap_low")
+        assert hi >= lo
+
+
+def test_jaca_beats_fifo_lru_at_small_capacity(ps):
+    """Fig. 15: static overlap-ranked cache beats FIFO/LRU for the
+    full-batch sweep access pattern at sub-working-set capacities."""
+    capacity = 60
+    jaca = simulate_policy_hit_rate(ps, capacity, policy="overlap_high")
+    fifo = simulate_policy_hit_rate(ps, capacity, policy="fifo")
+    lru = simulate_policy_hit_rate(ps, capacity, policy="lru")
+    assert jaca > fifo
+    assert jaca > lru
+
+
+def test_hit_rate_monotone_in_capacity(ps):
+    rates = [simulate_policy_hit_rate(ps, c, policy="overlap_high")
+             for c in (5, 20, 80, 320, 100000)]
+    assert all(b >= a - 1e-9 for a, b in zip(rates, rates[1:]))
+    assert rates[-1] == pytest.approx(1.0)
+
+
+def test_plan_hit_rate_accounting(ps):
+    cap = CacheCapacity(c_gpu=[25] * 4, c_cpu=50)
+    plan = build_cache_plan(ps, cap, refresh_every=4)
+    hr = plan_hit_rate(plan)
+    assert 0.0 <= hr["hit"] <= 1.0
+    assert hr["hit"] == pytest.approx(hr["local_hit"] + hr["global_hit"])
+    assert hr["miss"] == pytest.approx(1.0 - hr["hit"])
+    # amortisation: refresh steps re-send the cached tiers
+    assert hr["amortised_hit"] == pytest.approx(hr["hit"] * 0.75)
+
+
+def test_comm_bytes_math(ps):
+    cap = CacheCapacity(c_gpu=[25] * 4, c_cpu=50)
+    plan = build_cache_plan(ps, cap, refresh_every=4)
+    cb = comm_bytes_per_step(plan, feat_dim=64)
+    assert cb["cached_step_bytes"] < cb["refresh_step_bytes"]
+    assert cb["cached_step_bytes"] <= cb["amortised_bytes"] <= cb["refresh_step_bytes"]
+    assert 0.0 <= cb["reduction"] <= 1.0
+    # more aggressive staleness -> more saving
+    plan8 = build_cache_plan(ps, cap, refresh_every=8)
+    cb8 = comm_bytes_per_step(plan8, feat_dim=64)
+    assert cb8["amortised_bytes"] <= cb["amortised_bytes"]
+
+
+def test_global_tier_requires_membership(ps):
+    """A halo only lands in a worker's global tier if it is in the shared
+    global cache's gid set."""
+    cap = CacheCapacity(c_gpu=[5] * 4, c_cpu=30)
+    plan = build_cache_plan(ps, cap)
+    gset = set(int(v) for v in plan.global_gids)
+    for w in plan.workers:
+        assert all(int(v) in gset for v in w.global_gids)
+    assert plan.global_gids.size <= 30

@@ -1,0 +1,144 @@
+"""Hypothesis property tests on system invariants.
+
+The central one: for ANY graph/partitioning/capacity, the exchange plan
+reconstructs the exact halo feature matrix each worker needs — i.e. the
+static communication plan is information-losslessly equivalent to a direct
+gather from the global feature table.
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cal_capacity, build_cache_plan, CacheCapacity
+from repro.core.jaca import plan_hit_rate
+from repro.dist import build_exchange_plan
+from repro.dist.capgnn_sim import (_pull, _scatter, _build_global,
+                                   _read_global, _tier_dict, _glob_dict)
+from repro.graph import csr_from_edges, build_partition
+from repro.graph.partition import random_partition
+from repro.kernels.ops import ell_pack
+
+
+@st.composite
+def graph_and_parts(draw):
+    n = draw(st.integers(8, 60))
+    m = draw(st.integers(n, 5 * n))
+    parts = draw(st.integers(2, 4))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    g = csr_from_edges(src[keep], dst[keep], n, dedup=True)
+    assign = random_partition(g, parts, seed=seed)
+    # ensure every part non-empty (stacked layout assumes it)
+    for p in range(parts):
+        assign[p % n] = p
+    return g, build_partition(g, assign, hops=1)
+
+
+@st.composite
+def caps(draw):
+    return (draw(st.integers(0, 30)), draw(st.integers(0, 30)))
+
+
+@given(graph_and_parts(), caps())
+@settings(max_examples=40, deadline=None)
+def test_exchange_plan_reconstructs_halo_exactly(gp, cc):
+    """scatter(pull) over all three tiers == direct feature gather."""
+    g, ps = gp
+    c_gpu, c_cpu = cc
+    p = ps.num_parts
+    plan = build_cache_plan(ps, CacheCapacity(c_gpu=[c_gpu] * p, c_cpu=c_cpu),
+                            refresh_every=1)
+    xplan = build_exchange_plan(ps, plan)
+
+    d = 3
+    rng = np.random.default_rng(0)
+    feats = rng.normal(size=(g.num_nodes, d)).astype(np.float32)
+    ni = max(pt.n_inner for pt in ps.parts)
+    nh = max(max(pt.n_halo for pt in ps.parts), 1)
+    h = np.zeros((p, ni, d), np.float32)
+    for i, pt in enumerate(ps.parts):
+        h[i, :pt.n_inner] = feats[pt.inner_nodes]
+    hj = jnp.asarray(h)
+
+    un = _tier_dict(xplan.uncached)
+    loc = _tier_dict(xplan.local)
+    glob = _glob_dict(xplan.glob)
+    halo = jnp.zeros((p, nh, d))
+    halo = _scatter(halo, un["recv_halo_pos"], _pull(un, hj), un["recv_valid"])
+    halo = _scatter(halo, loc["recv_halo_pos"], _pull(loc, hj), loc["recv_valid"])
+    buf = _build_global(glob, hj)
+    halo = _read_global(glob, buf, halo)
+    halo = np.asarray(halo)
+    for i, pt in enumerate(ps.parts):
+        np.testing.assert_allclose(halo[i, :pt.n_halo], feats[pt.halo_nodes],
+                                   rtol=1e-6, atol=1e-6)
+
+
+@given(graph_and_parts(), caps())
+@settings(max_examples=40, deadline=None)
+def test_cache_plan_partitions_halo(gp, cc):
+    """Tiers form an exact partition of each worker's halo positions, and
+    row accounting matches."""
+    g, ps = gp
+    c_gpu, c_cpu = cc
+    p = ps.num_parts
+    plan = build_cache_plan(ps, CacheCapacity(c_gpu=[c_gpu] * p, c_cpu=c_cpu))
+    for w, part in zip(plan.workers, ps.parts):
+        pos = np.concatenate([w.local_pos, w.global_pos, w.uncached_pos])
+        assert np.array_equal(np.sort(pos), np.arange(part.n_halo))
+        # gid arrays are consistent with pos arrays
+        assert np.array_equal(w.local_gids, part.halo_nodes[w.local_pos])
+        assert np.array_equal(w.global_gids, part.halo_nodes[w.global_pos])
+        assert np.array_equal(w.uncached_gids, part.halo_nodes[w.uncached_pos])
+    hr = plan_hit_rate(plan)
+    assert 0.0 <= hr["hit"] <= 1.0
+
+
+@given(graph_and_parts())
+@settings(max_examples=30, deadline=None)
+def test_overlap_ratio_counts_memberships(gp):
+    g, ps = gp
+    r = ps.overlap_ratio()
+    manual = np.zeros(g.num_nodes, dtype=int)
+    for part in ps.parts:
+        for v in part.halo_nodes:
+            manual[v] += 1
+    assert np.array_equal(r, manual)
+    # a vertex is never halo of its own partition
+    for part in ps.parts:
+        assert not np.any(ps.assign[part.halo_nodes] == part.part_id)
+
+
+@given(st.integers(2, 50), st.integers(2, 60), st.integers(1, 300),
+       st.integers(0, 2 ** 16))
+@settings(max_examples=40, deadline=None)
+def test_ell_pack_preserves_edges(n_rows, n_cols, m, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_cols, m).astype(np.int32)
+    dst = rng.integers(0, n_rows, m).astype(np.int32)
+    w = rng.normal(size=m).astype(np.float32)
+    w[w == 0] = 1.0
+    cols, vals = ell_pack(src, dst, w, n_rows)
+    # multiset of (dst, src, w) survives the packing
+    got = sorted((r, int(c), float(v))
+                 for r in range(n_rows)
+                 for c, v in zip(cols[r], vals[r]) if v != 0)
+    want = sorted((int(d_), int(s_), float(w_))
+                  for s_, d_, w_ in zip(src, dst, w))
+    assert got == want
+
+
+@given(graph_and_parts())
+@settings(max_examples=20, deadline=None)
+def test_capacity_algorithm_bounds(gp):
+    """Alg. 1 outputs are within [0, n_halo] / [0, |halo union|]."""
+    from repro.core.device_profile import PROFILES
+    g, ps = gp
+    profiles = [PROFILES["rtx3090"]] * ps.num_parts
+    cap = cal_capacity(ps, [8, 8], profiles, m_cpu_gib=0.5)
+    for c, part in zip(cap.c_gpu, ps.parts):
+        assert 0 <= c <= part.n_halo
+    assert 0 <= cap.c_cpu <= len(ps.halo_union())

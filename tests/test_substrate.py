@@ -1,0 +1,196 @@
+"""Substrate units: optimizers, checkpointing, staleness controller,
+device profiles, GNN model backends, reordering."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step
+from repro.core import StalenessController, theorem1_bound, measure_profile
+from repro.core.device_profile import PROFILES, PAPER_GROUPS, make_group, TPU_V5E
+from repro.graph import rmat, symmetric_normalize, reorder_partition_arrays, build_partition
+from repro.graph.partition import metis_partition
+from repro.models.gnn import (GNNConfig, init_gnn, gnn_forward,
+                              make_local_adj, cross_entropy_loss, accuracy)
+from repro.optim import sgd, adam, adamw, clip_by_global_norm
+
+
+# --------------------------------------------------------------------- optim
+
+def _quad_min(opt, steps=200):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return opt.update(grads, state, params)
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    return float(jnp.abs(params["w"] - target).max())
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.05, momentum=0.9),
+                                 adam(0.1), adamw(0.1, weight_decay=0.0)])
+def test_optimizers_minimize_quadratic(opt):
+    assert _quad_min(opt) < 1e-2
+
+
+def test_adamw_decays_weights():
+    opt = adamw(0.1, weight_decay=0.5)
+    params = {"w": jnp.ones(4) * 10.0}
+    state = opt.init(params)
+    zero_grads = {"w": jnp.zeros(4)}
+    params2, _ = opt.update(zero_grads, state, params)
+    assert float(params2["w"][0]) < 10.0
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.ones(4) * 3.0, "b": jnp.ones(9) * 4.0}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    leaves = jax.tree.leaves(clipped)
+    got = float(jnp.sqrt(sum(jnp.sum(g ** 2) for g in leaves)))
+    assert got == pytest.approx(1.0, rel=1e-5)
+    assert float(norm) > 1.0
+
+
+# ---------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layers": [jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                       {"b": jnp.ones(4, jnp.bfloat16)}],
+            "step": jnp.asarray(7)}
+    d = str(tmp_path)
+    save_checkpoint(d, 3, tree)
+    save_checkpoint(d, 10, tree)
+    assert latest_step(d) == 10
+    got = load_checkpoint(d, 10, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        load_checkpoint(d, 1, {"w": jnp.zeros((3, 3))})
+
+
+# ----------------------------------------------------------------- staleness
+
+def test_fixed_staleness_schedule():
+    ctl = StalenessController(refresh_every=4)
+    pattern = []
+    for _ in range(8):
+        pattern.append(ctl.should_refresh())
+        ctl.observe()
+    assert pattern == [True, False, False, False, True, False, False, False]
+
+
+def test_adaptive_staleness_shrinks_on_drift():
+    ctl = StalenessController(refresh_every=8, adaptive=True, eps_h=0.5)
+    for _ in range(4):
+        ctl.observe(drift_inf_norm=2.0)   # way over the bound
+    assert ctl.period < 8
+    for _ in range(20):
+        ctl.observe(drift_inf_norm=0.01)  # well under
+    assert ctl.period >= 8
+
+
+def test_theorem1_bound_decays():
+    b10 = theorem1_bound(5.0, rho=1.0, alpha=2.0, t=10)
+    b1000 = theorem1_bound(5.0, rho=1.0, alpha=2.0, t=1000)
+    assert b1000 < b10
+    assert b1000 == pytest.approx(
+        2 * 5.0 / np.sqrt(1000) + 1.0 * 2.0 / (2 * np.sqrt(1000)))
+
+
+# ------------------------------------------------------------ device profile
+
+def test_paper_groups_match_table4():
+    for k, names in PAPER_GROUPS.items():
+        assert len(names) == int(k[1:])
+        profs = make_group(names)
+        assert all(p.mm > 0 and p.mem_gib > 0 for p in profs)
+    # Table 1 ordering: 3090 faster than 1650 at MM
+    assert PROFILES["rtx3090"].mm < PROFILES["gtx1650"].mm
+
+
+def test_measure_profile_runs():
+    prof = measure_profile(size=128, repeats=1)
+    assert prof.mm > 0 and prof.spmm > 0 and prof.h2d > 0
+    assert TPU_V5E.mm < PROFILES["rtx3090"].mm  # 197 TF/s beats a 3090
+
+
+# --------------------------------------------------------------- GNN models
+
+@pytest.fixture(scope="module")
+def tiny():
+    g = symmetric_normalize(rmat(120, 700, seed=4))
+    rng = np.random.default_rng(0)
+    feats = jnp.asarray(rng.normal(size=(g.num_nodes, 12)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 4, g.num_nodes).astype(np.int32))
+    return g, feats, labels
+
+
+@pytest.mark.parametrize("model", ["gcn", "sage", "gat", "gin"])
+def test_gnn_forward_and_grads(tiny, model):
+    g, feats, labels = tiny
+    cfg = GNNConfig(model=model, in_dim=12, hidden_dim=16, out_dim=4,
+                    num_layers=2)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    adj = make_local_adj(g, g.num_nodes, backend="edges")
+    logits = gnn_forward(cfg, params, adj, feats, None)
+    assert logits.shape == (g.num_nodes, 4)
+    grads = jax.grad(lambda p: cross_entropy_loss(
+        gnn_forward(cfg, p, adj, feats, None), labels))(params)
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+@pytest.mark.parametrize("model", ["gcn", "gin"])
+def test_adjacency_backends_agree(tiny, model):
+    g, feats, _ = tiny
+    cfg = GNNConfig(model=model, in_dim=12, hidden_dim=16, out_dim=4,
+                    num_layers=2)
+    params = init_gnn(jax.random.PRNGKey(1), cfg)
+    outs = {}
+    for backend in ("dense", "edges", "ell"):
+        adj = make_local_adj(g, g.num_nodes, backend=backend)
+        outs[backend] = np.asarray(gnn_forward(cfg, params, adj, feats, None))
+    np.testing.assert_allclose(outs["edges"], outs["dense"], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs["edges"], outs["ell"], rtol=2e-4, atol=2e-4)
+
+
+def test_accuracy_metric():
+    logits = jnp.asarray([[2.0, 0.0], [0.0, 2.0], [2.0, 0.0]])
+    labels = jnp.asarray([0, 1, 1])
+    assert float(accuracy(logits, labels)) == pytest.approx(2 / 3)
+    mask = jnp.asarray([1.0, 1.0, 0.0])
+    assert float(accuracy(logits, labels, mask)) == pytest.approx(1.0)
+
+
+# ----------------------------------------------------------------- reorder
+
+def test_reorder_preserves_graph_semantics():
+    g = symmetric_normalize(rmat(200, 1200, seed=6))
+    ps = build_partition(g, metis_partition(g, 2, seed=0), hops=1)
+    part = ps.parts[0]
+    pri = np.random.default_rng(0).random(part.n_halo)
+    new_g, perm = reorder_partition_arrays(part.local_graph, part.n_inner, pri)
+    assert np.array_equal(np.sort(perm), np.arange(part.n_local))
+    # inner ids stay in the inner range, halo in the halo range
+    assert np.all(perm[:part.n_inner] < part.n_inner)
+    assert np.all(perm[part.n_inner:] >= part.n_inner)
+    # edge multiset is preserved under the permutation
+    src, dst = part.local_graph.edges()
+    inv = np.empty(part.n_local, dtype=np.int64)
+    inv[perm] = np.arange(part.n_local)
+    ns, nd = new_g.edges()
+    assert sorted(zip(inv[src].tolist(), inv[dst].tolist())) == \
+        sorted(zip(ns.tolist(), nd.tolist()))
