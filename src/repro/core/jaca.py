@@ -275,12 +275,20 @@ def comm_bytes_per_step(plan: CachePlan, feat_dim: int,
 
     cached step: only uncached halos move.
     refresh step: all halos move (uncached + both cache tiers refresh), but
-    global-tier rows are deduplicated — one broadcast row per unique vertex
-    instead of one copy per consumer partition.
+    global-tier rows are deduplicated — one broadcast row per unique
+    *consumed* vertex instead of one copy per consumer partition (resident
+    rows no worker reads are never refreshed).  These figures follow the
+    paper's point-to-point transport model and equal the row counts of the
+    compiled exchange plan's index sets
+    (``repro.dist.ExchangePlan.bytes_per_step``, asserted by the tier-1
+    suite); the SPMD runtime's ``all_gather`` emulation of that transport
+    moves more on the wire.
     """
     n_un = sum(w.uncached_pos.size for w in plan.workers)
     n_local = sum(w.local_pos.size for w in plan.workers)
-    n_global_dedup = int(plan.global_gids.size)
+    used_global = [w.global_gids for w in plan.workers if w.global_gids.size]
+    n_global_dedup = (int(np.unique(np.concatenate(used_global)).size)
+                      if used_global else 0)
     row = feat_dim * dtype_bytes
     cached_step = n_un * row
     refresh_step = (n_un + n_local + n_global_dedup) * row

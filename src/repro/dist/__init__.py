@@ -1,0 +1,23 @@
+"""CaPGNN partition-parallel runtime (paper §4-§5).
+
+- :mod:`repro.dist.exchange` — compile a JACA cache plan into static
+  gather/scatter index sets; stack partitions into the padded ``[P, ...]``
+  layout.
+- :mod:`repro.dist.capgnn_sim` — single-device stacked oracle runtime and
+  the `train_capgnn` loop with exact byte accounting.
+- :mod:`repro.dist.capgnn_spmd` — the same step functions lowered through
+  ``shard_map`` collectives over a device mesh (flat or multi-pod).
+"""
+from .exchange import (ExchangePlan, ExchangeTier, GlobalTier, StackedParts,
+                       build_exchange_plan, stack_partitions)
+from .capgnn_sim import (SimRuntime, TrainReport, init_caches,
+                         make_sim_runtime, train_capgnn)
+from .capgnn_spmd import SpmdRuntime, make_spmd_runtime
+
+__all__ = [
+    "ExchangePlan", "ExchangeTier", "GlobalTier", "StackedParts",
+    "build_exchange_plan", "stack_partitions",
+    "SimRuntime", "TrainReport", "init_caches", "make_sim_runtime",
+    "train_capgnn",
+    "SpmdRuntime", "make_spmd_runtime",
+]

@@ -1,0 +1,318 @@
+"""Single-device stacked oracle for the CaPGNN partition-parallel runtime.
+
+Every partition's state lives in one padded ``[P, ...]`` array and the
+per-worker computation is a ``vmap`` over the leading axis; the inter-worker
+exchange is ordinary gather/scatter index arithmetic over the stacked inner
+matrix.  Because the arithmetic is identical to what `capgnn_spmd` lowers
+through ``shard_map`` collectives, this runtime doubles as the numerical
+oracle for the SPMD parity tests — and, with ``refresh_every=1``, as an
+exact reimplementation of single-worker full-graph training (the tier-1
+correctness anchor).
+
+Three step flavours (paper §4.2/§4.3):
+
+- ``step_refresh``   — all three tiers pulled fresh; caches rewritten.
+- ``step_cached``    — local/global tiers read stale from the caches; only
+  the uncached tier is exchanged.  Caches unchanged.
+- ``step_pipelined`` — same numerics as ``step_cached`` (consumes the same
+  stale tiers) but *additionally* emits this step's fresh cache rows, the
+  way the pipeline overlaps the refresh transfer with compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.staleness import StalenessController
+from repro.models.gnn import (EdgeListAdj, GNNConfig, _layer_apply, accuracy,
+                              cross_entropy_loss, init_gnn)
+from repro.optim import Optimizer
+
+from .exchange import ExchangePlan, ExchangeTier, GlobalTier, StackedParts
+
+__all__ = ["make_sim_runtime", "SimRuntime", "init_caches", "train_capgnn",
+           "TrainReport"]
+
+
+# ---------------------------------------------------------------------------
+# Tier primitives (shared by the property tests and both runtimes)
+# ---------------------------------------------------------------------------
+
+def _tier_dict(t: ExchangeTier) -> dict:
+    return {
+        "send_row": jnp.asarray(t.send_row, jnp.int32),
+        "recv_src_part": jnp.asarray(t.recv_src_part, jnp.int32),
+        "recv_src_slot": jnp.asarray(t.recv_src_slot, jnp.int32),
+        "recv_halo_pos": jnp.asarray(t.recv_halo_pos, jnp.int32),
+        "recv_valid": jnp.asarray(t.recv_valid),
+    }
+
+
+def _glob_dict(g: GlobalTier) -> dict:
+    return {
+        "send_row": jnp.asarray(g.send_row, jnp.int32),
+        "src_part": jnp.asarray(g.src_part, jnp.int32),
+        "src_slot": jnp.asarray(g.src_slot, jnp.int32),
+        "read_pos": jnp.asarray(g.read_pos, jnp.int32),
+        "read_buf_idx": jnp.asarray(g.read_buf_idx, jnp.int32),
+        "read_valid": jnp.asarray(g.read_valid),
+    }
+
+
+def _pull(td: dict, h: jnp.ndarray) -> jnp.ndarray:
+    """Gather one tier's rows from the stacked inner matrix ``h [P,NI,d]``.
+
+    Owners pack their send buffers, consumers address the payload by
+    (src_part, src_slot).  Invalid (padding) rows are zeroed so they can be
+    cached or compared without carrying garbage.  Returns ``[P, R, d]``.
+    """
+    p = h.shape[0]
+    payload = h[jnp.arange(p)[:, None], td["send_row"]]          # [P, S, d]
+    rows = payload[td["recv_src_part"], td["recv_src_slot"]]     # [P, R, d]
+    return jnp.where(td["recv_valid"][..., None], rows, 0.0)
+
+
+def _scatter(halo: jnp.ndarray, pos: jnp.ndarray, rows: jnp.ndarray,
+             valid: jnp.ndarray) -> jnp.ndarray:
+    """Scatter tier rows into the halo buffer ``[P, NH, d]`` at ``pos``;
+    invalid entries are routed out of bounds and dropped."""
+    nh = halo.shape[1]
+    pos_eff = jnp.where(valid, pos, nh)
+    pidx = jnp.arange(halo.shape[0])[:, None]
+    return halo.at[pidx, pos_eff].set(rows, mode="drop")
+
+
+def _build_global(gd: dict, h: jnp.ndarray) -> jnp.ndarray:
+    """Fill the deduplicated global buffer ``[G, d]`` from owners' rows."""
+    p = h.shape[0]
+    payload = h[jnp.arange(p)[:, None], gd["send_row"]]          # [P, S, d]
+    return payload[gd["src_part"], gd["src_slot"]]               # [G, d]
+
+
+def _read_global(gd: dict, buf: jnp.ndarray, halo: jnp.ndarray) -> jnp.ndarray:
+    """Serve each worker's global-tier halo positions from the buffer."""
+    rows = buf[gd["read_buf_idx"]]                               # [P, RG, d]
+    return _scatter(halo, gd["read_pos"], rows, gd["read_valid"])
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: GNNConfig, xplan: ExchangePlan, num_parts: int) -> dict:
+    """Zero-filled stale tiers, one entry per cached exchange layer.
+
+    Entry ``l-1`` holds the halo inputs of layer ``l`` (layers ``1..L-1``);
+    layer 0 consumes the static input features, which never go stale.
+    """
+    dims = cfg.feat_dims[1: cfg.num_layers]
+    r_local = int(np.asarray(xplan.local.recv_halo_pos).shape[1])
+    g = xplan.glob.n_unique
+    return {
+        "local": [jnp.zeros((num_parts, r_local, d), jnp.float32)
+                  for d in dims],
+        "global": [jnp.zeros((g, d), jnp.float32) for d in dims],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Runtime
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimRuntime:
+    cfg: GNNConfig
+    xplan: ExchangePlan
+    comm_dims: list        # per-exchange-layer feature dims (byte accounting)
+    forward_fresh: Callable
+    step_refresh: Callable
+    step_cached: Callable
+    step_pipelined: Callable
+    evaluate: Callable
+    caches0: dict
+
+
+def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
+                     opt: Optimizer, exchange_layer0: bool = True
+                     ) -> SimRuntime:
+    """Build the jitted stacked-oracle runtime.
+
+    ``exchange_layer0=False`` models pre-replicated input features (they are
+    static, so a deployment ships them once): layer 0 drops out of the byte
+    accounting, while the numerics are unchanged.
+    """
+    p, ni, nh = sp.num_parts, sp.n_inner_max, sp.n_halo_max
+    layers = cfg.num_layers
+
+    feats = jnp.asarray(sp.feats)
+    halo_feats = jnp.asarray(sp.halo_feats)
+    labels = jnp.asarray(sp.labels).reshape(-1)
+    masks = {k: jnp.asarray(m).reshape(-1)
+             for k, m in (("train", sp.train_mask), ("val", sp.val_mask),
+                          ("test", sp.test_mask))}
+    e_src = jnp.asarray(sp.e_src)
+    e_dst = jnp.asarray(sp.e_dst)
+    e_w = jnp.asarray(sp.e_w)
+    un_d = _tier_dict(xplan.uncached)
+    loc_d = _tier_dict(xplan.local)
+    glob_d = _glob_dict(xplan.glob)
+
+    def layer_all(lp, h, halo, is_last):
+        def one(es, ed, ew, hi, hhi):
+            adj = EdgeListAdj(es, ed, ew, ni, ni + nh)
+            h_local = jnp.concatenate([hi, hhi], axis=0)
+            return _layer_apply(cfg, lp, adj, h_local, ni, is_last)
+        return jax.vmap(one)(e_src, e_dst, e_w, h, halo)
+
+    def forward(params, caches, use_stale: bool):
+        h = feats
+        fresh = {"local": [], "global": []}
+        for li, lp in enumerate(params):
+            if li == 0:
+                halo = halo_feats
+            else:
+                d = h.shape[-1]
+                halo = jnp.zeros((p, nh, d), h.dtype)
+                halo = _scatter(halo, un_d["recv_halo_pos"], _pull(un_d, h),
+                                un_d["recv_valid"])
+                loc_fresh = _pull(loc_d, h)
+                buf_fresh = _build_global(glob_d, h)
+                loc_use = caches["local"][li - 1] if use_stale else loc_fresh
+                buf_use = caches["global"][li - 1] if use_stale else buf_fresh
+                halo = _scatter(halo, loc_d["recv_halo_pos"], loc_use,
+                                loc_d["recv_valid"])
+                halo = _read_global(glob_d, buf_use, halo)
+                fresh["local"].append(loc_fresh)
+                fresh["global"].append(buf_fresh)
+            h = layer_all(lp, h, halo, is_last=(li == layers - 1))
+        return h, fresh
+
+    def loss_fn(params, caches, use_stale: bool):
+        logits, fresh = forward(params, caches, use_stale)
+        flat = logits.reshape(-1, logits.shape[-1])
+        loss = cross_entropy_loss(flat, labels, masks["train"])
+        return loss, (flat, fresh)
+
+    def make_step(use_stale: bool, emit_fresh: bool):
+        def step(params, opt_state, caches):
+            (loss, (flat, fresh)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, caches, use_stale)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            metrics = {"loss": loss,
+                       "acc": accuracy(flat, labels, masks["train"])}
+            if emit_fresh:
+                drifts = [jnp.max(jnp.abs(a - b)) for a, b in
+                          zip(fresh["local"] + fresh["global"],
+                              caches["local"] + caches["global"])
+                          if a.size]
+                metrics["drift"] = (jnp.max(jnp.stack(drifts)) if drifts
+                                    else jnp.zeros(()))
+            out_caches = fresh if emit_fresh else caches
+            return new_params, new_state, out_caches, metrics
+        return jax.jit(step)
+
+    caches0 = init_caches(cfg, xplan, p)
+
+    @jax.jit
+    def forward_fresh(params):
+        logits, _ = forward(params, caches0, False)
+        return logits
+
+    @jax.jit
+    def _eval_flat(params):
+        return forward_fresh(params).reshape(-1, cfg.out_dim)
+
+    def evaluate(params, split: str = "val"):
+        flat = _eval_flat(params)
+        m = masks[split]
+        return (float(cross_entropy_loss(flat, labels, m)),
+                float(accuracy(flat, labels, m)))
+
+    comm_dims = list(cfg.feat_dims[:layers])
+    if not exchange_layer0:
+        comm_dims = comm_dims[1:]
+
+    return SimRuntime(cfg=cfg, xplan=xplan, comm_dims=comm_dims,
+                      forward_fresh=forward_fresh,
+                      step_refresh=make_step(False, True),
+                      step_cached=make_step(True, False),
+                      step_pipelined=make_step(True, True),
+                      evaluate=evaluate,
+                      caches0=caches0)
+
+
+# ---------------------------------------------------------------------------
+# Training loop with exact byte accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainReport:
+    losses: list
+    val_acc: list
+    comm_bytes: int
+    comm_bytes_vanilla: int
+    comm_reduction: float
+    refresh_steps: int
+    cached_steps: int
+    wall_time_s: float
+
+
+def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
+                 num_parts: int, opt: Optimizer, epochs: int = 100,
+                 eval_every: int = 0, controller: StalenessController | None = None,
+                 pipeline: bool = False, seed: int = 0
+                 ) -> tuple[list, TrainReport]:
+    """Full-batch CaPGNN training under the staleness schedule.
+
+    One step per epoch (full batch).  Per-step bytes are the plan's exact
+    figures: a vanilla runtime would move every halo row at every layer of
+    every step; CaPGNN moves only the uncached tier on cached steps and a
+    deduplicated refresh on refresh steps.  With ``pipeline=True`` the
+    scheduled refreshes (after warm-up) run as ``step_pipelined`` — the
+    refresh payload rides along with the compute instead of a synchronous
+    exchange phase; bytes are identical, latency is hidden.
+    """
+    if controller is None:
+        controller = StalenessController(refresh_every=xplan.refresh_every)
+    params = init_gnn(jax.random.PRNGKey(seed), cfg)
+    opt_state = opt.init(params)
+    caches = init_caches(cfg, xplan, num_parts)
+    dims = getattr(runtime, "comm_dims", list(cfg.feat_dims[:cfg.num_layers]))
+
+    losses: list[float] = []
+    val_acc: list[float] = []
+    comm = 0
+    vanilla = 0
+    refresh_steps = 0
+    t0 = time.perf_counter()
+    for e in range(epochs):
+        refresh = controller.should_refresh()
+        if refresh and pipeline and controller.step > 0:
+            step_fn = runtime.step_pipelined
+        elif refresh:
+            step_fn = runtime.step_refresh
+        else:
+            step_fn = runtime.step_cached
+        params, opt_state, caches, m = step_fn(params, opt_state, caches)
+        losses.append(float(m["loss"]))
+        comm += sum(xplan.bytes_per_step(d, refresh=refresh) for d in dims)
+        vanilla += sum(xplan.total_halo * d * 4 for d in dims)
+        refresh_steps += int(refresh)
+        drift = float(m["drift"]) if "drift" in m else None
+        controller.observe(drift)
+        if eval_every and (e + 1) % eval_every == 0:
+            val_acc.append(runtime.evaluate(params, "val")[1])
+    wall = time.perf_counter() - t0
+
+    report = TrainReport(
+        losses=losses, val_acc=val_acc, comm_bytes=comm,
+        comm_bytes_vanilla=vanilla,
+        comm_reduction=1.0 - comm / max(vanilla, 1),
+        refresh_steps=refresh_steps, cached_steps=epochs - refresh_steps,
+        wall_time_s=wall)
+    return params, report

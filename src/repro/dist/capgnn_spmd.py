@@ -1,0 +1,236 @@
+"""SPMD CaPGNN runtime: the stacked-oracle step functions lowered through
+``shard_map`` over a device mesh, one partition per device.
+
+Layout: every ``[P, ...]`` stacked array is sharded on its leading axis over
+the mesh axis (or axis *tuple* — the §5.11-style multi-pod mesh shards the
+partition dim over ``("pod", "data")``, linearised row-major, which is
+exactly the order ``all_gather`` over that tuple reconstructs).  Parameters,
+optimizer state and the deduplicated global-cache buffer are replicated.
+
+Communication: each tier's owners pack their (deduplicated) send rows into a
+dense payload and a single static-shape ``all_gather`` delivers every
+payload to every consumer; consumers then address rows by
+``(src_part, src_slot)``.  On cached steps only the uncached tier's payload
+moves — the JACA tiers replace that collective entirely.  Loss and gradient
+reductions are ``psum`` over the same axis tuple, so backprop through the
+exchange (the ``all_gather`` transpose) reproduces the oracle's exact
+cross-partition gradient flow.
+
+Version note: ``shard_map`` is imported from ``jax.experimental.shard_map``
+for compatibility with pre-``jax.shard_map`` releases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+if hasattr(jax, "shard_map"):            # jax >= 0.5 exports it at top level
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map
+
+from repro.models.gnn import (EdgeListAdj, GNNConfig, _layer_apply, accuracy,
+                              cross_entropy_loss)
+from repro.optim import Optimizer
+
+from .capgnn_sim import init_caches
+from .exchange import ExchangePlan, StackedParts
+
+__all__ = ["make_spmd_runtime", "SpmdRuntime"]
+
+
+@dataclasses.dataclass
+class SpmdRuntime:
+    cfg: GNNConfig
+    xplan: ExchangePlan
+    mesh: object
+    axis_names: tuple
+    comm_dims: list
+    forward_fresh: Callable
+    step_refresh: Callable
+    step_cached: Callable
+    step_pipelined: Callable
+    evaluate: Callable
+    caches0: dict
+
+
+def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
+                      opt: Optimizer, mesh, axis: str | Sequence[str] = "data",
+                      exchange_layer0: bool = True) -> SpmdRuntime:
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    mesh_size = int(np.prod([mesh.shape[n] for n in names]))
+    p, ni, nh = sp.num_parts, sp.n_inner_max, sp.n_halo_max
+    if mesh_size != p:
+        raise ValueError(f"mesh axes {names} have {mesh_size} devices but "
+                         f"the plan has {p} partitions")
+    layers = cfg.num_layers
+    total_train = float(np.maximum(sp.train_mask.sum(), 1.0))
+
+    # Sharded batch: leading dim = partition. Tier recv/read/send sides are
+    # per-partition too, so they shard the same way.
+    data_sh = {
+        "feats": sp.feats, "halo_feats": sp.halo_feats,
+        "labels": sp.labels.astype(np.int32),
+        "train_mask": sp.train_mask, "val_mask": sp.val_mask,
+        "test_mask": sp.test_mask,
+        "e_src": sp.e_src, "e_dst": sp.e_dst, "e_w": sp.e_w,
+        "un": {"send_row": xplan.uncached.send_row,
+               "recv_src_part": xplan.uncached.recv_src_part,
+               "recv_src_slot": xplan.uncached.recv_src_slot,
+               "recv_halo_pos": xplan.uncached.recv_halo_pos,
+               "recv_valid": xplan.uncached.recv_valid},
+        "loc": {"send_row": xplan.local.send_row,
+                "recv_src_part": xplan.local.recv_src_part,
+                "recv_src_slot": xplan.local.recv_src_slot,
+                "recv_halo_pos": xplan.local.recv_halo_pos,
+                "recv_valid": xplan.local.recv_valid},
+        "gl": {"send_row": xplan.glob.send_row,
+               "read_pos": xplan.glob.read_pos,
+               "read_buf_idx": xplan.glob.read_buf_idx,
+               "read_valid": xplan.glob.read_valid},
+    }
+    data_sh = jax.tree.map(jnp.asarray, data_sh)
+    # Replicated: the global buffer's per-unique-vertex source addressing.
+    data_rep = {"g_src_part": jnp.asarray(xplan.glob.src_part),
+                "g_src_slot": jnp.asarray(xplan.glob.src_slot)}
+
+    caches_spec = {"local": P(names), "global": P()}
+
+    def _device_forward(params, caches, dsh, drep, use_stale: bool):
+        """Per-device forward. ``dsh`` leaves carry a leading dim of 1."""
+        feats = dsh["feats"][0]                       # [NI, F]
+        halo0 = dsh["halo_feats"][0]                  # [NH, F]
+        es, ed, ew = dsh["e_src"][0], dsh["e_dst"][0], dsh["e_w"][0]
+
+        def pull(tier):
+            def run(h):
+                payload = h[tier["send_row"][0]]                  # [S, d]
+                gathered = jax.lax.all_gather(payload, names)     # [P, S, d]
+                rows = gathered[tier["recv_src_part"][0],
+                                tier["recv_src_slot"][0]]         # [R, d]
+                return jnp.where(tier["recv_valid"][0][..., None], rows, 0.0)
+            return run
+
+        def scatter(halo, pos, rows, valid):
+            pos_eff = jnp.where(valid, pos, nh)
+            return halo.at[pos_eff].set(rows, mode="drop")
+
+        def build_global(h):
+            payload = h[dsh["gl"]["send_row"][0]]                 # [SG, d]
+            gathered = jax.lax.all_gather(payload, names)         # [P, SG, d]
+            return gathered[drep["g_src_part"], drep["g_src_slot"]]
+
+        pull_un = pull(dsh["un"])
+        pull_loc = pull(dsh["loc"])
+
+        h = feats
+        fresh = {"local": [], "global": []}
+        for li, lp in enumerate(params):
+            if li == 0:
+                halo = halo0
+            else:
+                d = h.shape[-1]
+                halo = jnp.zeros((nh, d), h.dtype)
+                halo = scatter(halo, dsh["un"]["recv_halo_pos"][0],
+                               pull_un(h), dsh["un"]["recv_valid"][0])
+                loc_fresh = pull_loc(h)
+                buf_fresh = build_global(h)
+                loc_use = (caches["local"][li - 1][0] if use_stale
+                           else loc_fresh)
+                buf_use = caches["global"][li - 1] if use_stale else buf_fresh
+                halo = scatter(halo, dsh["loc"]["recv_halo_pos"][0], loc_use,
+                               dsh["loc"]["recv_valid"][0])
+                gl = dsh["gl"]
+                halo = scatter(halo, gl["read_pos"][0],
+                               buf_use[gl["read_buf_idx"][0]],
+                               gl["read_valid"][0])
+                fresh["local"].append(loc_fresh[None])
+                fresh["global"].append(buf_fresh)
+            adj = EdgeListAdj(es, ed, ew, ni, ni + nh)
+            h_local = jnp.concatenate([h, halo], axis=0)
+            h = _layer_apply(cfg, lp, adj, h_local, ni,
+                             is_last=(li == layers - 1))
+        return h, fresh
+
+    def _device_loss(params, caches, dsh, drep, use_stale: bool):
+        logits, fresh = _device_forward(params, caches, dsh, drep, use_stale)
+        labels = dsh["labels"][0]
+        mask = dsh["train_mask"][0]
+        logp = jax.nn.log_softmax(logits, -1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], -1)[:, 0]
+        loss = jax.lax.psum(jnp.sum(nll * mask), names) / total_train
+        return loss, (logits, fresh)
+
+    def _make_step(use_stale: bool, emit_fresh: bool):
+        def device_step(params, opt_state, caches, dsh, drep):
+            (loss, (logits, fresh)), grads = jax.value_and_grad(
+                _device_loss, has_aux=True)(params, caches, dsh, drep,
+                                            use_stale)
+            grads = jax.lax.psum(grads, names)
+            new_params, new_state = opt.update(grads, opt_state, params)
+            labels = dsh["labels"][0]
+            mask = dsh["train_mask"][0]
+            correct = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+            acc = jax.lax.psum(jnp.sum(correct * mask), names) / total_train
+            metrics = {"loss": loss, "acc": acc}
+            if emit_fresh:
+                drifts = [jnp.max(jnp.abs(a - b)) for a, b in
+                          zip(fresh["local"] + fresh["global"],
+                              caches["local"] + caches["global"])
+                          if a.size]
+                local_max = (jnp.max(jnp.stack(drifts)) if drifts
+                             else jnp.zeros(()))
+                metrics["drift"] = jax.lax.pmax(local_max, names)
+            out_caches = fresh if emit_fresh else caches
+            return new_params, new_state, out_caches, metrics
+
+        sm = shard_map(
+            device_step, mesh=mesh,
+            in_specs=(P(), P(), caches_spec, P(names), P()),
+            out_specs=(P(), P(), caches_spec, P()),
+            check_rep=False)
+
+        @jax.jit
+        def step(params, opt_state, caches):
+            return sm(params, opt_state, caches, data_sh, data_rep)
+        return step
+
+    def _device_fwd_fresh(params, caches, dsh, drep):
+        logits, _ = _device_forward(params, caches, dsh, drep, False)
+        return logits[None]
+
+    sm_fwd = shard_map(_device_fwd_fresh, mesh=mesh,
+                       in_specs=(P(), caches_spec, P(names), P()),
+                       out_specs=P(names), check_rep=False)
+    caches0 = init_caches(cfg, xplan, p)
+
+    @jax.jit
+    def forward_fresh(params):
+        return sm_fwd(params, caches0, data_sh, data_rep)
+
+    labels_flat = jnp.asarray(sp.labels.astype(np.int32)).reshape(-1)
+    masks_flat = {"train": jnp.asarray(sp.train_mask).reshape(-1),
+                  "val": jnp.asarray(sp.val_mask).reshape(-1),
+                  "test": jnp.asarray(sp.test_mask).reshape(-1)}
+
+    def evaluate(params, split: str = "val"):
+        flat = forward_fresh(params).reshape(-1, cfg.out_dim)
+        m = masks_flat[split]
+        return (float(cross_entropy_loss(flat, labels_flat, m)),
+                float(accuracy(flat, labels_flat, m)))
+
+    comm_dims = list(cfg.feat_dims[:layers])
+    if not exchange_layer0:
+        comm_dims = comm_dims[1:]
+
+    return SpmdRuntime(cfg=cfg, xplan=xplan, mesh=mesh, axis_names=names,
+                       comm_dims=comm_dims, forward_fresh=forward_fresh,
+                       step_refresh=_make_step(False, True),
+                       step_cached=_make_step(True, False),
+                       step_pipelined=_make_step(True, True),
+                       evaluate=evaluate, caches0=caches0)

@@ -1,0 +1,294 @@
+"""Compile a JACA :class:`~repro.core.jaca.CachePlan` into static exchange
+index sets, and stack per-partition task data into the padded ``[P, ...]``
+layout the partition-parallel runtimes consume.
+
+The exchange plan turns the plan's three halo tiers into gather/scatter
+programs that are pure index arithmetic — no dynamic shapes, so the same
+arrays drive both the single-device stacked oracle (`capgnn_sim`, a vmap
+over the partition axis) and the collectives runtime (`capgnn_spmd`, a
+`shard_map` over a device mesh):
+
+- **uncached** tier: exchanged every step (the only per-step traffic on a
+  cached step);
+- **local** tier: each worker's HBM-resident cache rows, refreshed every
+  ``refresh_every`` steps;
+- **global** tier: the shared (CPU in the paper) cache — one buffer row per
+  *unique* vertex, so a vertex consumed by k workers moves once per refresh
+  instead of k times.  This dedup is where the global tier's savings come
+  from (paper §4.2).
+
+Transport model: per tier, every owner packs the rows any consumer needs
+into a dense send buffer (``send_row``); consumers address rows by
+``(src_part, src_slot)`` into the gathered payload and scatter them to
+their halo positions.  In the SPMD runtime the payload gather is a single
+``all_gather`` — static shapes, no point-to-point plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.jaca import CachePlan
+from repro.data.gnn_data import FullBatchTask
+from repro.graph.partition import PartitionSet
+
+__all__ = ["ExchangeTier", "GlobalTier", "ExchangePlan", "StackedParts",
+           "build_exchange_plan", "stack_partitions"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeTier:
+    """One tier's gather/scatter program (uncached or local).
+
+    All arrays are padded to the per-partition maximum; ``*_valid`` masks
+    mark real entries.  ``send_row`` holds *deduplicated* inner rows per
+    owner (a row consumed by several partitions occupies one send slot).
+    """
+    name: str
+    send_row: np.ndarray       # [P, S] inner row each owner contributes
+    send_valid: np.ndarray     # [P, S] bool
+    recv_src_part: np.ndarray  # [P, R] owning partition per received row
+    recv_src_slot: np.ndarray  # [P, R] slot in the owner's send buffer
+    recv_halo_pos: np.ndarray  # [P, R] halo position to scatter into
+    recv_valid: np.ndarray     # [P, R] bool
+
+    @property
+    def n_rows(self) -> int:
+        """Total un-padded received rows (one per (vertex, consumer))."""
+        return int(self.recv_valid.sum())
+
+    @property
+    def n_send_rows(self) -> int:
+        """Total un-padded send rows (deduplicated per owner)."""
+        return int(self.send_valid.sum())
+
+
+@dataclasses.dataclass(frozen=True)
+class GlobalTier:
+    """The shared global cache: one buffer row per unique consumed vertex."""
+    send_row: np.ndarray       # [P, S] inner rows owners contribute
+    send_valid: np.ndarray     # [P, S] bool
+    src_part: np.ndarray       # [G] owner partition per buffer row
+    src_slot: np.ndarray       # [G] slot in owner's send buffer
+    read_pos: np.ndarray       # [P, RG] halo positions served from the buffer
+    read_buf_idx: np.ndarray   # [P, RG] buffer row per read
+    read_valid: np.ndarray     # [P, RG] bool
+
+    @property
+    def n_unique(self) -> int:
+        """Unique vertices resident in (and read from) the global buffer."""
+        return int(self.src_part.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePlan:
+    """Compiled communication program for one CachePlan."""
+    num_parts: int
+    uncached: ExchangeTier
+    local: ExchangeTier
+    glob: GlobalTier
+    refresh_every: int
+    total_halo: int
+
+    def bytes_per_step(self, feat_dim: int, refresh: bool,
+                       dtype_bytes: int = 4) -> int:
+        """Bytes of one layer exchange of width ``feat_dim`` under the
+        paper's point-to-point transport model: one row per (vertex,
+        consumer) for the uncached/local tiers, one row per unique vertex
+        for the global tier.  The plan's index sets count these rows
+        exactly; matches :func:`repro.core.jaca.comm_bytes_per_step`
+        (asserted by the tier-1 suite).  Note the `capgnn_spmd` runtime
+        *emulates* this transport with ``all_gather`` collectives, whose
+        wire volume is the send-buffer rows replicated to all P devices —
+        use these figures for the paper's accounting, not for hardware
+        interconnect counters.
+        """
+        row = feat_dim * dtype_bytes
+        n = self.uncached.n_rows
+        if refresh:
+            n += self.local.n_rows + self.glob.n_unique
+        return n * row
+
+
+def _pad2(rows: list[np.ndarray], fill: int, dtype=np.int32
+          ) -> tuple[np.ndarray, np.ndarray]:
+    """Stack ragged int rows into [P, max] + validity mask."""
+    p = len(rows)
+    width = max((r.shape[0] for r in rows), default=0)
+    out = np.full((p, width), fill, dtype=dtype)
+    valid = np.zeros((p, width), dtype=bool)
+    for i, r in enumerate(rows):
+        out[i, : r.shape[0]] = r
+        valid[i, : r.shape[0]] = True
+    return out, valid
+
+
+def _owner_slots(op_all: np.ndarray, orow_all: np.ndarray, num_parts: int
+                 ) -> tuple[list[np.ndarray], np.ndarray]:
+    """Deduplicated per-owner send-slot allocation, vectorized.
+
+    For ``(owner, row)`` request pairs, returns the unique rows each owner
+    must send (sorted by row) and, per input pair, the slot of its row in
+    the owner's send buffer.  O(N log N) in numpy — plan compilation stays
+    cheap at million-halo scale.
+    """
+    if op_all.size == 0:
+        return ([np.zeros(0, np.int64) for _ in range(num_parts)],
+                np.zeros(0, np.int64))
+    base = int(orow_all.max()) + 1
+    key = op_all.astype(np.int64) * base + orow_all.astype(np.int64)
+    uniq_key, inverse = np.unique(key, return_inverse=True)
+    u_op = uniq_key // base
+    u_row = uniq_key % base
+    first = np.searchsorted(u_op, np.arange(num_parts))
+    slot_of_uniq = np.arange(uniq_key.size) - first[u_op]
+    send_rows = [u_row[u_op == q] for q in range(num_parts)]
+    return send_rows, slot_of_uniq[inverse]
+
+
+def build_exchange_plan(ps: PartitionSet, plan: CachePlan) -> ExchangePlan:
+    """Compile ``plan``'s tiering into static gather/scatter index sets."""
+    p = ps.num_parts
+    n = ps.graph.num_nodes
+    owner_row = np.full(n, -1, np.int64)
+    for part in ps.parts:
+        owner_row[part.inner_nodes] = np.arange(part.n_inner)
+    owner_part = ps.assign.astype(np.int64)
+
+    def build_tier(name: str, gids_per_part: list[np.ndarray],
+                   pos_per_part: list[np.ndarray]) -> ExchangeTier:
+        counts = [g.size for g in gids_per_part]
+        gids_all = (np.concatenate(gids_per_part) if sum(counts)
+                    else np.zeros(0, np.int64))
+        send_rows, slots_all = _owner_slots(owner_part[gids_all],
+                                            owner_row[gids_all], p)
+        offsets = np.cumsum([0] + counts)
+        src_parts = [owner_part[g].astype(np.int32) for g in gids_per_part]
+        src_slots = [slots_all[offsets[i]: offsets[i + 1]].astype(np.int32)
+                     for i in range(p)]
+        send_row, send_valid = _pad2([r.astype(np.int32)
+                                      for r in send_rows], fill=0)
+        recv_src_part, recv_valid = _pad2(src_parts, fill=0)
+        recv_src_slot, _ = _pad2(src_slots, fill=0)
+        recv_halo_pos, _ = _pad2([np.asarray(q, np.int32)
+                                  for q in pos_per_part], fill=0)
+        return ExchangeTier(name=name, send_row=send_row,
+                            send_valid=send_valid,
+                            recv_src_part=recv_src_part,
+                            recv_src_slot=recv_src_slot,
+                            recv_halo_pos=recv_halo_pos,
+                            recv_valid=recv_valid)
+
+    uncached = build_tier("uncached",
+                          [w.uncached_gids for w in plan.workers],
+                          [w.uncached_pos for w in plan.workers])
+    local = build_tier("local",
+                       [w.local_gids for w in plan.workers],
+                       [w.local_pos for w in plan.workers])
+
+    # Global tier: unique over the gids any worker actually reads (resident
+    # rows no one consumes are never refreshed, so they cost nothing).
+    read_gids = [w.global_gids for w in plan.workers]
+    if any(g.size for g in read_gids):
+        used = np.unique(np.concatenate([g for g in read_gids if g.size]))
+    else:
+        used = np.zeros(0, np.int64)
+    g_send_rows, g_slots = _owner_slots(owner_part[used], owner_row[used], p)
+    g_src_part = owner_part[used].astype(np.int32)
+    g_src_slot = g_slots.astype(np.int32)
+    g_send_row, g_send_valid = _pad2([r.astype(np.int32)
+                                      for r in g_send_rows], fill=0)
+    # `used` is sorted, so buffer indices come straight from searchsorted
+    read_buf_idx, read_valid = _pad2(
+        [np.searchsorted(used, w.global_gids).astype(np.int32)
+         for w in plan.workers], fill=0)
+    read_pos, _ = _pad2([w.global_pos.astype(np.int32)
+                         for w in plan.workers], fill=0)
+    glob = GlobalTier(send_row=g_send_row, send_valid=g_send_valid,
+                      src_part=g_src_part, src_slot=g_src_slot,
+                      read_pos=read_pos, read_buf_idx=read_buf_idx,
+                      read_valid=read_valid)
+
+    return ExchangePlan(num_parts=p, uncached=uncached, local=local,
+                        glob=glob, refresh_every=plan.refresh_every,
+                        total_halo=ps.total_halo())
+
+
+# ---------------------------------------------------------------------------
+# Stacked partition layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StackedParts:
+    """Padded ``[P, ...]`` stacking of every partition's task slice.
+
+    Local edge src ids are remapped so halo position ``q`` becomes column
+    ``n_inner_max + q`` — the runtimes concatenate ``[h_inner, h_halo]``
+    along rows, so the remap must target the *padded* inner width.  Padding
+    edges carry ``dst = n_inner_max`` (dropped by segment ops) and zero
+    weight; padded label/mask rows are zeroed so they never touch the loss.
+    """
+    num_parts: int
+    n_inner_max: int
+    n_halo_max: int
+    n_inner: np.ndarray        # [P]
+    n_halo: np.ndarray         # [P]
+    feats: np.ndarray          # [P, NI, F] inner input features
+    halo_feats: np.ndarray     # [P, NH, F] halo input features (static)
+    labels: np.ndarray         # [P, NI] int32
+    train_mask: np.ndarray     # [P, NI] float32
+    val_mask: np.ndarray       # [P, NI] float32
+    test_mask: np.ndarray      # [P, NI] float32
+    e_src: np.ndarray          # [P, ME] int32 in [0, NI+NH)
+    e_dst: np.ndarray          # [P, ME] int32 in [0, NI] (NI = padding)
+    e_w: np.ndarray            # [P, ME] float32 (0 at padding)
+
+
+def stack_partitions(ps: PartitionSet, task: FullBatchTask) -> StackedParts:
+    p = ps.num_parts
+    ni = max(1, max(pt.n_inner for pt in ps.parts))
+    nh = max(1, max(pt.n_halo for pt in ps.parts))
+    f = task.features.shape[1]
+
+    feats = np.zeros((p, ni, f), np.float32)
+    halo_feats = np.zeros((p, nh, f), np.float32)
+    labels = np.zeros((p, ni), np.int32)
+    masks = {k: np.zeros((p, ni), np.float32)
+             for k in ("train", "val", "test")}
+
+    edge_lists = []
+    for i, pt in enumerate(ps.parts):
+        feats[i, : pt.n_inner] = task.features[pt.inner_nodes]
+        halo_feats[i, : pt.n_halo] = task.features[pt.halo_nodes]
+        labels[i, : pt.n_inner] = task.labels[pt.inner_nodes]
+        masks["train"][i, : pt.n_inner] = task.train_mask[pt.inner_nodes]
+        masks["val"][i, : pt.n_inner] = task.val_mask[pt.inner_nodes]
+        masks["test"][i, : pt.n_inner] = task.test_mask[pt.inner_nodes]
+        src, dst = pt.local_graph.edges()
+        keep = dst < pt.n_inner
+        src, dst = src[keep], dst[keep]
+        w = (pt.local_graph.edge_weight[keep]
+             if pt.local_graph.edge_weight is not None
+             else np.ones(src.shape[0], np.float32))
+        src = np.where(src < pt.n_inner, src, ni + (src - pt.n_inner))
+        edge_lists.append((src.astype(np.int32), dst.astype(np.int32),
+                           w.astype(np.float32)))
+
+    me = max(1, max(s.shape[0] for s, _, _ in edge_lists))
+    e_src = np.zeros((p, me), np.int32)
+    e_dst = np.full((p, me), ni, np.int32)   # NI row => dropped by segments
+    e_w = np.zeros((p, me), np.float32)
+    for i, (src, dst, w) in enumerate(edge_lists):
+        m = src.shape[0]
+        e_src[i, :m] = src
+        e_dst[i, :m] = dst
+        e_w[i, :m] = w
+
+    return StackedParts(
+        num_parts=p, n_inner_max=ni, n_halo_max=nh,
+        n_inner=np.array([pt.n_inner for pt in ps.parts], np.int32),
+        n_halo=np.array([pt.n_halo for pt in ps.parts], np.int32),
+        feats=feats, halo_feats=halo_feats, labels=labels,
+        train_mask=masks["train"], val_mask=masks["val"],
+        test_mask=masks["test"], e_src=e_src, e_dst=e_dst, e_w=e_w)

@@ -33,7 +33,42 @@ import dataclasses
 import math
 import re
 
-__all__ = ["analyse_hlo", "HloCost"]
+__all__ = ["analyse_hlo", "HloCost", "xla_cost_analysis"]
+
+# --- version-compat shims -------------------------------------------------
+# `jax.shard_map` graduated from `jax.experimental.shard_map` in newer
+# releases; callers (tests, benchmarks) use the top-level name, so backfill
+# it on older installs.
+try:
+    import functools as _functools
+
+    import jax as _jax
+    if not hasattr(_jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @_functools.wraps(_shard_map)
+        def _shard_map_compat(*args, **kwargs):
+            # The experimental version's replication checker predates the
+            # scan-carry fix (it rejects psum-in-scan bodies); the graduated
+            # API does not have that failure mode, so default the check off.
+            kwargs.setdefault("check_rep", False)
+            return _shard_map(*args, **kwargs)
+
+        _jax.shard_map = _shard_map_compat
+except ImportError:          # HLO text analysis itself needs no jax
+    pass
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """XLA's own per-module cost analysis as a plain dict.
+
+    ``Compiled.cost_analysis()`` returned a one-element list of dicts before
+    jax 0.5 and a bare dict after; normalise so callers can index by key.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,

@@ -1,0 +1,52 @@
+"""Minimal stand-in for the `hypothesis` API used by this test suite.
+
+Loaded by ``tests/conftest.py`` ONLY when the real hypothesis package is not
+installed (this path is appended to ``sys.path`` behind an import check, so
+a real installation always wins).  It implements just what the suite needs —
+``given``, ``settings``, ``strategies.integers`` and
+``strategies.composite`` — as deterministic seeded random sampling with no
+shrinking.  On a failing example it re-raises the original assertion with
+the example index noted.
+"""
+from __future__ import annotations
+
+import functools
+
+from . import strategies
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Records ``max_examples`` on the test function; other knobs ignored."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            for i in range(n):
+                rng = strategies._rng_for_example(fn.__qualname__, i)
+                vals = [s.sample(rng) for s in strats]
+                kvals = {k: s.sample(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *vals, **kwargs, **kvals)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} for {fn.__name__}: "
+                        f"{e!r}") from e
+        # Hide the wrapped signature: pytest must not mistake the strategy
+        # parameters for fixtures.
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

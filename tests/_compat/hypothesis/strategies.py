@@ -1,0 +1,50 @@
+"""Strategy objects for the vendored hypothesis stand-in (see __init__)."""
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+__all__ = ["integers", "composite", "SearchStrategy"]
+
+
+def _rng_for_example(test_name: str, index: int) -> np.random.Generator:
+    """Deterministic per-(test, example) stream, stable across runs."""
+    h = hashlib.sha256(f"{test_name}:{index}".encode()).digest()
+    return np.random.default_rng(int.from_bytes(h[:8], "little"))
+
+
+class SearchStrategy:
+    def sample(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def sample(self, rng):
+        return int(rng.integers(self.min_value, self.max_value + 1))
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+class _Composite(SearchStrategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+
+    def sample(self, rng):
+        def draw(strategy: SearchStrategy):
+            return strategy.sample(rng)
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+def composite(fn):
+    def make(*args, **kwargs):
+        return _Composite(fn, args, kwargs)
+    return make

@@ -3,3 +3,11 @@ import sys
 
 # Make src/ importable without installation.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests need hypothesis; when it isn't installed (hermetic
+# containers), fall back to the minimal vendored stand-in.  Appended behind
+# the import check so a real installation always takes precedence.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.append(os.path.join(os.path.dirname(__file__), "_compat"))

@@ -93,6 +93,44 @@ def test_comm_bytes_math(ps):
     assert cb8["amortised_bytes"] <= cb["amortised_bytes"]
 
 
+def test_plan_hit_rate_beats_fifo_lru_trace(ps):
+    """Regression for the JACA policy-quality claim (paper Fig. 15): the
+    overlap-ranked static plan's *exact* hit rate beats the FIFO/LRU trace
+    simulation at the same total capacity on an r-mat graph."""
+    cap_per_worker = 15
+    plan = build_cache_plan(ps, CacheCapacity(c_gpu=[cap_per_worker] * 4,
+                                              c_cpu=0), refresh_every=4)
+    exact_hit = plan_hit_rate(plan)["hit"]
+    total_cap = cap_per_worker * 4
+    fifo = simulate_policy_hit_rate(ps, total_cap, policy="fifo")
+    lru = simulate_policy_hit_rate(ps, total_cap, policy="lru")
+    assert exact_hit > fifo
+    assert exact_hit > lru
+
+
+def test_comm_bytes_match_exchange_plan(ps):
+    """comm_bytes_per_step must equal the point-to-point rows the compiled
+    exchange plan enumerates — i.e. the valid rows in its static index
+    sets (the paper's transport model)."""
+    from repro.dist import build_exchange_plan
+    cap = CacheCapacity(c_gpu=[25] * 4, c_cpu=50)
+    plan = build_cache_plan(ps, cap, refresh_every=4)
+    xplan = build_exchange_plan(ps, plan)
+    d = 64
+    cb = comm_bytes_per_step(plan, feat_dim=d)
+    assert xplan.bytes_per_step(d, refresh=False) == cb["cached_step_bytes"]
+    assert xplan.bytes_per_step(d, refresh=True) == cb["refresh_step_bytes"]
+    # and both equal a direct count of the plan's valid index rows
+    row = d * 4
+    moved_cached = int(xplan.uncached.recv_valid.sum()) * row
+    moved_refresh = moved_cached + row * (
+        int(xplan.local.recv_valid.sum()) + xplan.glob.n_unique)
+    assert moved_cached == cb["cached_step_bytes"]
+    assert moved_refresh == cb["refresh_step_bytes"]
+    # global dedup really deduplicates: buffer rows <= per-consumer reads
+    assert xplan.glob.n_unique <= int(xplan.glob.read_valid.sum())
+
+
 def test_global_tier_requires_membership(ps):
     """A halo only lands in a worker's global tier if it is in the shared
     global cache's gid set."""
