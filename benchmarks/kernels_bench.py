@@ -1,8 +1,16 @@
 """Operator-level benchmark: ELL padding waste + kernel-vs-oracle parity on
 partition-shaped workloads (the paper's SpMM hot spot, Table 1's compute
-side), plus ELL pack statistics before/after RAPA pruning.
+side), plus ELL pack statistics before/after RAPA pruning and an
+end-to-end aggregation-backend sweep (edges vs Pallas ell/hybrid through
+the stacked runtime — logit parity + per-step wall time).
+
+``REPRO_BENCH_TINY=1`` shrinks the task for CI smoke runs (the Pallas
+interpret path is exercised either way).
 """
 from __future__ import annotations
+
+import os
+import time
 
 import numpy as np
 import jax.numpy as jnp
@@ -12,7 +20,7 @@ from repro.graph import build_partition, metis_partition
 from repro.kernels.ops import (ell_pack, ell_pack_hybrid, ell_spmm,
                                ell_stats, hybrid_spmm)
 from repro.kernels import ref as R
-from ._util import DEFAULT_OUT, bench_task, save
+from ._util import BENCH_SCALE, DEFAULT_OUT, bench_task, save
 
 
 def _pack_partition(part):
@@ -23,8 +31,59 @@ def _pack_partition(part):
     return ell_pack(src[keep], dst[keep], w, part.n_inner)
 
 
-def run(out_dir: str = DEFAULT_OUT) -> dict:
-    task = bench_task("flickr")
+def _backend_sweep(task, ps, epochs: int = 2) -> dict:
+    """Same exchange plan + caches through every runtime backend: logit
+    parity vs the edge-list reference and per-refresh-step wall time."""
+    import jax
+    from repro.core import PROFILES, build_cache_plan, cal_capacity
+    from repro.dist import (build_exchange_plan, init_caches,
+                            make_sim_runtime, stack_partitions)
+    from repro.models.gnn import GNNConfig, init_gnn
+    from repro.optim import adam
+
+    cfg = GNNConfig(model="gcn", in_dim=task.features.shape[1],
+                    hidden_dim=64, out_dim=task.num_classes, num_layers=3)
+    cap = cal_capacity(ps, cfg.feat_dims,
+                       [PROFILES["rtx3090"]] * ps.num_parts)
+    plan = build_cache_plan(ps, cap, refresh_every=2)
+    xplan = build_exchange_plan(ps, plan)
+    opt = adam(1e-2)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+
+    sweep = {}
+    logits_ref = None
+    for backend in ("edges", "ell", "hybrid"):
+        sp = stack_partitions(ps, task, backend=backend)
+        rt = make_sim_runtime(cfg, sp, xplan, opt, backend=backend)
+        logits = np.asarray(rt.forward_fresh(params))
+        if logits_ref is None:
+            logits_ref = logits
+        opt_state = opt.init(params)
+        caches = init_caches(cfg, xplan, ps.num_parts)
+        jax.block_until_ready(                      # compile + run warm-up
+            rt.step_refresh(params, opt_state, caches))
+        t0 = time.perf_counter()
+        for _ in range(epochs):
+            _, _, _, m = rt.step_refresh(params, opt_state, caches)
+        jax.block_until_ready(m["loss"])
+        row = {"step_ms": (time.perf_counter() - t0) / epochs * 1e3,
+               "logit_max_diff": float(np.abs(logits - logits_ref).max())}
+        if sp.ell is not None:
+            row["max_deg"] = sp.ell.max_deg
+            row["tail_edges"] = int((sp.ell.tail_w != 0).sum())
+        sweep[backend] = row
+    return sweep
+
+
+def run(out_dir: str = DEFAULT_OUT, tiny: bool | None = None) -> dict:
+    if tiny is None:
+        tiny = bool(int(os.environ.get("REPRO_BENCH_TINY", "0")))
+    if tiny:
+        from repro.data import make_task
+        task = make_task("flickr", scale=BENCH_SCALE["flickr"] / 8,
+                         feat_dim=64)
+    else:
+        task = bench_task("flickr")
     g = task.graph
     profiles = make_group(PAPER_GROUPS["x4"])
     ps = build_partition(g, metis_partition(g, 4, seed=0), hops=1)
@@ -65,13 +124,14 @@ def run(out_dir: str = DEFAULT_OUT) -> dict:
                            if r["partitioner"] == "metis"])
     waste_rapa = np.mean([r["pad_waste"] for r in rows
                           if r["partitioner"] == "rapa"])
-    out = {"rows": rows,
+    out = {"tiny": bool(tiny), "rows": rows,
            "pad_waste_metis": float(waste_metis),
            "pad_waste_rapa": float(waste_rapa),
            "pad_waste_hybrid": float(np.mean([r["hybrid_pad_waste"]
                                               for r in rows])),
            "max_kernel_err": max(r["kernel_max_err"] for r in rows),
-           "max_hybrid_err": max(r["hybrid_max_err"] for r in rows)}
+           "max_hybrid_err": max(r["hybrid_max_err"] for r in rows),
+           "backend_sweep": _backend_sweep(task, ps)}
     save(out_dir, "kernels_bench", out)
     return out
 
@@ -83,6 +143,9 @@ def main():
           f"{out['pad_waste_hybrid']:.2%}; "
           f"max |kernel - oracle| = {out['max_kernel_err']:.2e}, "
           f"hybrid {out['max_hybrid_err']:.2e}")
+    for be, row in out["backend_sweep"].items():
+        print(f"  backend {be:7s}: {row['step_ms']:.1f} ms/refresh-step, "
+              f"logit max diff {row['logit_max_diff']:.2e}")
 
 
 if __name__ == "__main__":

@@ -5,8 +5,15 @@ Configurations (Table 8 rows): Vanilla (all-halo exchange every step),
 heterogeneous x4 group.  Reports epoch time, exact communication bytes,
 and final validation accuracy; Table 7's cross-method comparison columns
 are the Vanilla vs full-CaPGNN pair.
+
+``--backend edges|ell|hybrid`` swaps the local aggregation operator (the
+Pallas SpMM backends run in interpret mode on CPU); results land in
+``experiments/overall.json`` for ``edges`` and ``overall_<backend>.json``
+otherwise, so a sweep keeps every variant side by side.
 """
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -26,7 +33,7 @@ MODELS = ("gcn", "sage")
 
 
 def _variant(task, ps_base, profiles, model, jaca: bool, rapa: bool,
-             pipe: bool):
+             pipe: bool, backend: str = "edges"):
     cfg = GNNConfig(model=model, in_dim=task.features.shape[1],
                     hidden_dim=128, out_dim=task.num_classes, num_layers=3)
     ps = ps_base
@@ -42,9 +49,9 @@ def _variant(task, ps_base, profiles, model, jaca: bool, rapa: bool,
         refresh = 1
     plan = build_cache_plan(ps, cap, refresh_every=refresh)
     xplan = build_exchange_plan(ps, plan)
-    sp = stack_partitions(ps, task)
+    sp = stack_partitions(ps, task, backend=backend)
     opt = adam(0.01)
-    runtime = make_sim_runtime(cfg, sp, xplan, opt)
+    runtime = make_sim_runtime(cfg, sp, xplan, opt, backend=backend)
     ctl = StalenessController(refresh_every=refresh)
     with Timer() as t:
         params, rep = train_capgnn(cfg, runtime, xplan, ps.num_parts, opt,
@@ -66,7 +73,7 @@ VARIANTS = [("vanilla", False, False, False),
             ("+JACA+RAPA+Pipe", True, True, True)]
 
 
-def run(out_dir: str = DEFAULT_OUT) -> dict:
+def run(out_dir: str = DEFAULT_OUT, backend: str = "edges") -> dict:
     profiles = make_group(PAPER_GROUPS["x4"])
     table = {}
     for ds in DATASETS:
@@ -77,7 +84,7 @@ def run(out_dir: str = DEFAULT_OUT) -> dict:
             rows = {}
             for name, jaca, rapa, pipe in VARIANTS:
                 rows[name] = _variant(task, ps, profiles, model, jaca, rapa,
-                                      pipe)
+                                      pipe, backend=backend)
             table[f"{ds}/{model}"] = rows
 
     # headline claims
@@ -90,17 +97,25 @@ def run(out_dir: str = DEFAULT_OUT) -> dict:
             "comm_mb_vanilla": van["comm_mb"],
             "comm_mb_full": full["comm_mb"],
         }
-    out = {"table8": table, "claims": claims,
+    out = {"backend": backend, "table8": table, "claims": claims,
            "max_comm_reduction": max(c["comm_reduction_full"]
                                      for c in claims.values()),
            "min_acc_delta": min(c["acc_delta"] for c in claims.values())}
-    save(out_dir, "overall", out)
+    name = "overall" if backend == "edges" else f"overall_{backend}"
+    save(out_dir, name, out)
     return out
 
 
-def main():
-    out = run()
-    print(f"overall: max comm reduction {out['max_comm_reduction']:.1%}, "
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="edges",
+                    choices=("edges", "ell", "hybrid"),
+                    help="local aggregation backend for the runtime")
+    # parse_known_args: tolerate the benchmarks.run orchestrator's own flags
+    args, _ = ap.parse_known_args(argv)
+    out = run(backend=args.backend)
+    print(f"overall[{args.backend}]: "
+          f"max comm reduction {out['max_comm_reduction']:.1%}, "
           f"worst acc delta {out['min_acc_delta']:+.3f}")
     for key, rows in out["table8"].items():
         cells = "  ".join(

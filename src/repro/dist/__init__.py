@@ -8,15 +8,15 @@
 - :mod:`repro.dist.capgnn_spmd` — the same step functions lowered through
   ``shard_map`` collectives over a device mesh (flat or multi-pod).
 """
-from .exchange import (ExchangePlan, ExchangeTier, GlobalTier, StackedParts,
-                       build_exchange_plan, stack_partitions)
+from .exchange import (ExchangePlan, ExchangeTier, GlobalTier, StackedEllPack,
+                       StackedParts, build_exchange_plan, stack_partitions)
 from .capgnn_sim import (SimRuntime, TrainReport, init_caches,
                          make_sim_runtime, train_capgnn)
 from .capgnn_spmd import SpmdRuntime, make_spmd_runtime
 
 __all__ = [
-    "ExchangePlan", "ExchangeTier", "GlobalTier", "StackedParts",
-    "build_exchange_plan", "stack_partitions",
+    "ExchangePlan", "ExchangeTier", "GlobalTier", "StackedEllPack",
+    "StackedParts", "build_exchange_plan", "stack_partitions",
     "SimRuntime", "TrainReport", "init_caches", "make_sim_runtime",
     "train_capgnn",
     "SpmdRuntime", "make_spmd_runtime",

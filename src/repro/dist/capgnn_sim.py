@@ -29,14 +29,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.staleness import StalenessController
-from repro.models.gnn import (EdgeListAdj, GNNConfig, _layer_apply, accuracy,
-                              cross_entropy_loss, init_gnn)
+from repro.models.gnn import (EdgeListAdj, EllAdj, GNNConfig, HybridAdj,
+                              _layer_apply, accuracy, cross_entropy_loss,
+                              init_gnn)
 from repro.optim import Optimizer
 
 from .exchange import ExchangePlan, ExchangeTier, GlobalTier, StackedParts
 
 __all__ = ["make_sim_runtime", "SimRuntime", "init_caches", "train_capgnn",
-           "TrainReport"]
+           "TrainReport", "RUNTIME_BACKENDS", "check_backend",
+           "make_adj_builder"]
 
 
 # ---------------------------------------------------------------------------
@@ -101,6 +103,66 @@ def _read_global(gd: dict, buf: jnp.ndarray, halo: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Aggregation backends (shared with the SPMD runtime)
+# ---------------------------------------------------------------------------
+
+RUNTIME_BACKENDS = ("edges", "ell", "hybrid")
+
+
+def check_backend(sp: StackedParts, backend: str) -> None:
+    """Validate a runtime backend choice against the stacked layout."""
+    if backend not in RUNTIME_BACKENDS:
+        raise ValueError(f"unknown aggregation backend {backend!r}; "
+                         f"expected one of {RUNTIME_BACKENDS}")
+    if backend != "edges" and (sp.ell is None or sp.ell.backend != backend):
+        have = sp.ell.backend if sp.ell is not None else None
+        raise ValueError(
+            f"backend={backend!r} needs a matching stacked aggregation pack "
+            f"(found {have!r}); rebuild the stacked layout with "
+            f"stack_partitions(ps, task, backend={backend!r})")
+
+
+def make_adj_builder(sp: StackedParts, backend: str, interpret: bool = True):
+    """Return ``(pack_leaves, build)``: ``pack_leaves`` is a dict of
+    per-partition ``[P, ...]`` arrays to map over (vmap in the oracle, shard
+    in SPMD), and ``build(leaves)`` constructs one partition's
+    :class:`~repro.models.gnn.Adjacency` from the corresponding slices.
+
+    Every backend aggregates over the identical edge set (the packs are
+    built from the same remapped edge lists at stack time), so swapping the
+    backend changes kernel shape only — logits, gradients, and the exchange
+    byte accounting are backend-invariant.
+    """
+    check_backend(sp, backend)
+    ni, nh = sp.n_inner_max, sp.n_halo_max
+    if backend == "edges":
+        leaves = {"src": jnp.asarray(sp.e_src), "dst": jnp.asarray(sp.e_dst),
+                  "w": jnp.asarray(sp.e_w)}
+
+        def build(lv):
+            return EdgeListAdj(lv["src"], lv["dst"], lv["w"], ni, ni + nh)
+    elif backend == "ell":
+        leaves = {"cols": jnp.asarray(sp.ell.cols),
+                  "vals": jnp.asarray(sp.ell.vals)}
+
+        def build(lv):
+            return EllAdj(lv["cols"], lv["vals"], ni + nh,
+                          interpret=interpret)
+    else:  # hybrid
+        leaves = {"cols": jnp.asarray(sp.ell.cols),
+                  "vals": jnp.asarray(sp.ell.vals),
+                  "tail_src": jnp.asarray(sp.ell.tail_src),
+                  "tail_dst": jnp.asarray(sp.ell.tail_dst),
+                  "tail_w": jnp.asarray(sp.ell.tail_w)}
+
+        def build(lv):
+            return HybridAdj(lv["cols"], lv["vals"], lv["tail_src"],
+                             lv["tail_dst"], lv["tail_w"], ni + nh,
+                             interpret=interpret)
+    return leaves, build
+
+
+# ---------------------------------------------------------------------------
 # Caches
 # ---------------------------------------------------------------------------
 
@@ -135,16 +197,24 @@ class SimRuntime:
     step_pipelined: Callable
     evaluate: Callable
     caches0: dict
+    backend: str = "edges"
 
 
 def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
-                     opt: Optimizer, exchange_layer0: bool = True
+                     opt: Optimizer, exchange_layer0: bool = True,
+                     backend: str = "edges", interpret: bool = True
                      ) -> SimRuntime:
     """Build the jitted stacked-oracle runtime.
 
     ``exchange_layer0=False`` models pre-replicated input features (they are
     static, so a deployment ships them once): layer 0 drops out of the byte
     accounting, while the numerics are unchanged.
+
+    ``backend`` picks the per-partition aggregation operator: ``"edges"``
+    (segment-sum reference), ``"ell"`` (Pallas blocked-ELL SpMM) or
+    ``"hybrid"`` (Pallas ELL + COO overflow tail).  The non-edge backends
+    need the stacked pack from ``stack_partitions(..., backend=...)``; the
+    exchange plan, caches and byte accounting are backend-invariant.
     """
     p, ni, nh = sp.num_parts, sp.n_inner_max, sp.n_halo_max
     layers = cfg.num_layers
@@ -155,19 +225,17 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
     masks = {k: jnp.asarray(m).reshape(-1)
              for k, m in (("train", sp.train_mask), ("val", sp.val_mask),
                           ("test", sp.test_mask))}
-    e_src = jnp.asarray(sp.e_src)
-    e_dst = jnp.asarray(sp.e_dst)
-    e_w = jnp.asarray(sp.e_w)
+    adj_leaves, build_adj = make_adj_builder(sp, backend, interpret)
     un_d = _tier_dict(xplan.uncached)
     loc_d = _tier_dict(xplan.local)
     glob_d = _glob_dict(xplan.glob)
 
     def layer_all(lp, h, halo, is_last):
-        def one(es, ed, ew, hi, hhi):
-            adj = EdgeListAdj(es, ed, ew, ni, ni + nh)
+        def one(lv, hi, hhi):
+            adj = build_adj(lv)
             h_local = jnp.concatenate([hi, hhi], axis=0)
             return _layer_apply(cfg, lp, adj, h_local, ni, is_last)
-        return jax.vmap(one)(e_src, e_dst, e_w, h, halo)
+        return jax.vmap(one)(adj_leaves, h, halo)
 
     def forward(params, caches, use_stale: bool):
         h = feats
@@ -243,7 +311,7 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                       step_cached=make_step(True, False),
                       step_pipelined=make_step(True, True),
                       evaluate=evaluate,
-                      caches0=caches0)
+                      caches0=caches0, backend=backend)
 
 
 # ---------------------------------------------------------------------------

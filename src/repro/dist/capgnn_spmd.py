@@ -34,11 +34,10 @@ if hasattr(jax, "shard_map"):            # jax >= 0.5 exports it at top level
 else:
     from jax.experimental.shard_map import shard_map
 
-from repro.models.gnn import (EdgeListAdj, GNNConfig, _layer_apply, accuracy,
-                              cross_entropy_loss)
+from repro.models.gnn import GNNConfig, _layer_apply, accuracy, cross_entropy_loss
 from repro.optim import Optimizer
 
-from .capgnn_sim import init_caches
+from .capgnn_sim import init_caches, make_adj_builder
 from .exchange import ExchangePlan, StackedParts
 
 __all__ = ["make_spmd_runtime", "SpmdRuntime"]
@@ -57,11 +56,17 @@ class SpmdRuntime:
     step_pipelined: Callable
     evaluate: Callable
     caches0: dict
+    backend: str = "edges"
 
 
 def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                       opt: Optimizer, mesh, axis: str | Sequence[str] = "data",
-                      exchange_layer0: bool = True) -> SpmdRuntime:
+                      exchange_layer0: bool = True, backend: str = "edges",
+                      interpret: bool = True) -> SpmdRuntime:
+    """``backend`` mirrors :func:`make_sim_runtime`: the per-device local
+    aggregation runs through the edge-list segment-sum, the Pallas
+    blocked-ELL kernel, or the hybrid ELL+COO pack — the exchange
+    collectives and byte accounting are identical across backends."""
     names = (axis,) if isinstance(axis, str) else tuple(axis)
     mesh_size = int(np.prod([mesh.shape[n] for n in names]))
     p, ni, nh = sp.num_parts, sp.n_inner_max, sp.n_halo_max
@@ -70,6 +75,7 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                          f"the plan has {p} partitions")
     layers = cfg.num_layers
     total_train = float(np.maximum(sp.train_mask.sum(), 1.0))
+    adj_leaves, build_adj = make_adj_builder(sp, backend, interpret)
 
     # Sharded batch: leading dim = partition. Tier recv/read/send sides are
     # per-partition too, so they shard the same way.
@@ -78,7 +84,7 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         "labels": sp.labels.astype(np.int32),
         "train_mask": sp.train_mask, "val_mask": sp.val_mask,
         "test_mask": sp.test_mask,
-        "e_src": sp.e_src, "e_dst": sp.e_dst, "e_w": sp.e_w,
+        "adj": adj_leaves,
         "un": {"send_row": xplan.uncached.send_row,
                "recv_src_part": xplan.uncached.recv_src_part,
                "recv_src_slot": xplan.uncached.recv_src_slot,
@@ -105,7 +111,7 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         """Per-device forward. ``dsh`` leaves carry a leading dim of 1."""
         feats = dsh["feats"][0]                       # [NI, F]
         halo0 = dsh["halo_feats"][0]                  # [NH, F]
-        es, ed, ew = dsh["e_src"][0], dsh["e_dst"][0], dsh["e_w"][0]
+        adj = build_adj({k: v[0] for k, v in dsh["adj"].items()})
 
         def pull(tier):
             def run(h):
@@ -151,7 +157,6 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                                gl["read_valid"][0])
                 fresh["local"].append(loc_fresh[None])
                 fresh["global"].append(buf_fresh)
-            adj = EdgeListAdj(es, ed, ew, ni, ni + nh)
             h_local = jnp.concatenate([h, halo], axis=0)
             h = _layer_apply(cfg, lp, adj, h_local, ni,
                              is_last=(li == layers - 1))
@@ -233,4 +238,4 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                        step_refresh=_make_step(False, True),
                        step_cached=_make_step(True, False),
                        step_pipelined=_make_step(True, True),
-                       evaluate=evaluate, caches0=caches0)
+                       evaluate=evaluate, caches0=caches0, backend=backend)

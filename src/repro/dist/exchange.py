@@ -34,7 +34,7 @@ from repro.data.gnn_data import FullBatchTask
 from repro.graph.partition import PartitionSet
 
 __all__ = ["ExchangeTier", "GlobalTier", "ExchangePlan", "StackedParts",
-           "build_exchange_plan", "stack_partitions"]
+           "StackedEllPack", "build_exchange_plan", "stack_partitions"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,6 +220,33 @@ def build_exchange_plan(ps: PartitionSet, plan: CachePlan) -> ExchangePlan:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class StackedEllPack:
+    """Stacked blocked-ELL (+ optional COO tail) aggregation pack.
+
+    Built from the same remapped edge lists as ``StackedParts.e_*``, so
+    ``ell_spmm(cols[i], vals[i], concat([h_inner, h_halo]))`` equals the
+    segment-sum over that partition's edges bit-for-bit (up to summation
+    order).  ELL padding slots carry col 0 / val 0; the per-partition packs
+    are padded to the fleet-wide ``max_deg`` and tail width.  For the pure
+    ``"ell"`` backend the tail arrays have zero width.
+    """
+    backend: str               # "ell" | "hybrid"
+    cols: np.ndarray           # [P, NI, K] int32 in [0, NI+NH)
+    vals: np.ndarray           # [P, NI, K] float32 (0 at padding)
+    tail_src: np.ndarray       # [P, MT] int32 in [0, NI+NH)
+    tail_dst: np.ndarray       # [P, MT] int32 in [0, NI] (NI = padding)
+    tail_w: np.ndarray         # [P, MT] float32 (0 at padding)
+
+    @property
+    def max_deg(self) -> int:
+        return int(self.cols.shape[2])
+
+    @property
+    def tail_width(self) -> int:
+        return int(self.tail_src.shape[1])
+
+
+@dataclasses.dataclass(frozen=True)
 class StackedParts:
     """Padded ``[P, ...]`` stacking of every partition's task slice.
 
@@ -228,6 +255,11 @@ class StackedParts:
     along rows, so the remap must target the *padded* inner width.  Padding
     edges carry ``dst = n_inner_max`` (dropped by segment ops) and zero
     weight; padded label/mask rows are zeroed so they never touch the loss.
+
+    ``ell`` optionally carries the stacked blocked-ELL/hybrid aggregation
+    pack (``stack_partitions(..., backend="ell" | "hybrid")``) consumed by
+    the Pallas SpMM backends of the runtimes; the edge-list arrays are
+    always present (GAT and the reference backend need them).
     """
     num_parts: int
     n_inner_max: int
@@ -243,9 +275,54 @@ class StackedParts:
     e_src: np.ndarray          # [P, ME] int32 in [0, NI+NH)
     e_dst: np.ndarray          # [P, ME] int32 in [0, NI] (NI = padding)
     e_w: np.ndarray            # [P, ME] float32 (0 at padding)
+    ell: StackedEllPack | None = None
 
 
-def stack_partitions(ps: PartitionSet, task: FullBatchTask) -> StackedParts:
+def _stack_ell(edge_lists: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
+               n_inner_max: int, backend: str, quantile: float
+               ) -> StackedEllPack:
+    """Pack every partition's (remapped) edges to ELL/hybrid and pad the
+    packs to a common ``[P, NI, K]`` (+ ``[P, MT]`` tail) layout."""
+    from repro.kernels.ops import ell_pack, ell_pack_hybrid
+
+    packs = []
+    for src, dst, w in edge_lists:
+        if backend == "hybrid":
+            packs.append(ell_pack_hybrid(src, dst, w, n_inner_max,
+                                         quantile=quantile))
+        else:
+            c, v = ell_pack(src, dst, w, n_inner_max)
+            empty = np.zeros(0, np.int32)
+            packs.append((c, v, empty, empty.copy(),
+                          np.zeros(0, np.float32)))
+
+    p = len(packs)
+    k = max(c.shape[1] for c, *_ in packs)
+    mt = max(ts.shape[0] for _, _, ts, _, _ in packs)
+    cols = np.zeros((p, n_inner_max, k), np.int32)
+    vals = np.zeros((p, n_inner_max, k), np.float32)
+    tail_src = np.zeros((p, mt), np.int32)
+    tail_dst = np.full((p, mt), n_inner_max, np.int32)  # NI row => dropped
+    tail_w = np.zeros((p, mt), np.float32)
+    for i, (c, v, ts, td, tw) in enumerate(packs):
+        cols[i, :, : c.shape[1]] = c
+        vals[i, :, : v.shape[1]] = v
+        tail_src[i, : ts.shape[0]] = ts
+        tail_dst[i, : td.shape[0]] = td
+        tail_w[i, : tw.shape[0]] = tw
+    return StackedEllPack(backend=backend, cols=cols, vals=vals,
+                          tail_src=tail_src, tail_dst=tail_dst, tail_w=tail_w)
+
+
+def stack_partitions(ps: PartitionSet, task: FullBatchTask,
+                     backend: str = "edges",
+                     ell_quantile: float = 0.95) -> StackedParts:
+    """Stack per-partition task slices; ``backend="ell" | "hybrid"`` also
+    builds the stacked Pallas aggregation pack (``StackedEllPack``) the
+    runtimes' non-edge-list backends consume."""
+    if backend not in ("edges", "ell", "hybrid"):
+        raise ValueError(f"unknown stacking backend {backend!r}; "
+                         "expected 'edges', 'ell' or 'hybrid'")
     p = ps.num_parts
     ni = max(1, max(pt.n_inner for pt in ps.parts))
     nh = max(1, max(pt.n_halo for pt in ps.parts))
@@ -285,10 +362,14 @@ def stack_partitions(ps: PartitionSet, task: FullBatchTask) -> StackedParts:
         e_dst[i, :m] = dst
         e_w[i, :m] = w
 
+    ell = (_stack_ell(edge_lists, ni, backend, ell_quantile)
+           if backend in ("ell", "hybrid") else None)
+
     return StackedParts(
         num_parts=p, n_inner_max=ni, n_halo_max=nh,
         n_inner=np.array([pt.n_inner for pt in ps.parts], np.int32),
         n_halo=np.array([pt.n_halo for pt in ps.parts], np.int32),
         feats=feats, halo_feats=halo_feats, labels=labels,
         train_mask=masks["train"], val_mask=masks["val"],
-        test_mask=masks["test"], e_src=e_src, e_dst=e_dst, e_w=e_w)
+        test_mask=masks["test"], e_src=e_src, e_dst=e_dst, e_w=e_w,
+        ell=ell)

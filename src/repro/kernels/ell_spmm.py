@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import functools
 
+import numpy as _np
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -86,7 +88,6 @@ def _spmm_vjp(block_rows: int, block_feat: int, col_chunk: int | None,
         contrib = vals.astype(jnp.float32)[..., None] * g32[:, None, :]
         d_h = jnp.zeros(h.shape, jnp.float32).at[cols.reshape(-1)].add(
             contrib.reshape(-1, g.shape[-1])).astype(h.dtype)
-        import numpy as _np
         ct_cols = _np.zeros(cols.shape, dtype=jax.dtypes.float0)
         return ct_cols, d_vals, d_h
 

@@ -31,7 +31,6 @@ def ell_pack(src: np.ndarray, dst: np.ndarray, w: np.ndarray, n_rows: int,
     vals = np.zeros((n_rows, md), dtype=np.float32)
     order = np.argsort(dst, kind="stable")
     src_s, dst_s, w_s = src[order], dst[order], w[order]
-    slot = np.zeros(n_rows, dtype=np.int64)
     # vectorised slot assignment: position within each dst group
     starts = np.searchsorted(dst_s, np.arange(n_rows))
     pos_in_group = np.arange(dst_s.shape[0]) - starts[dst_s]

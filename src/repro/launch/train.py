@@ -56,10 +56,11 @@ def run_gnn(args) -> dict:
         cap = CacheCapacity(c_gpu=[0] * p, c_cpu=0)
     plan = build_cache_plan(ps, cap, refresh_every=args.refresh_every)
     xplan = build_exchange_plan(ps, plan)
-    sp = stack_partitions(ps, task)
+    sp = stack_partitions(ps, task, backend=args.backend)
     opt = adam(args.lr)
     runtime = make_sim_runtime(cfg, sp, xplan, opt,
-                               exchange_layer0=not args.jaca)
+                               exchange_layer0=not args.jaca,
+                               backend=args.backend)
     ctl = StalenessController(refresh_every=args.refresh_every,
                              adaptive=args.adaptive_staleness)
     params, report = train_capgnn(cfg, runtime, xplan, p, opt,
@@ -129,6 +130,10 @@ def main():
     g.add_argument("--feat-dim", type=int, default=64)
     g.add_argument("--model", default="gcn",
                    choices=["gcn", "sage", "gat", "gin"])
+    g.add_argument("--backend", default="edges",
+                   choices=["edges", "ell", "hybrid"],
+                   help="local aggregation backend (ell/hybrid run the "
+                        "Pallas SpMM; interpret mode on CPU)")
     g.add_argument("--hidden", type=int, default=256)
     g.add_argument("--layers", type=int, default=3)
     g.add_argument("--parts", type=int, default=4)

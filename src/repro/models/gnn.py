@@ -19,9 +19,11 @@ import numpy as np
 from repro.nn import glorot, zeros_init
 from repro.graph.graph import Graph
 
-__all__ = ["Adjacency", "DenseAdj", "EdgeListAdj", "EllAdj", "GNNConfig",
-           "init_gnn", "gnn_forward", "make_local_adj", "cross_entropy_loss",
-           "bce_loss", "accuracy"]
+__all__ = ["Adjacency", "DenseAdj", "EdgeListAdj", "EllAdj", "HybridAdj",
+           "BACKENDS", "GNNConfig", "init_gnn", "gnn_forward",
+           "make_local_adj", "cross_entropy_loss", "bce_loss", "accuracy"]
+
+BACKENDS = ("edges", "dense", "ell", "hybrid")
 
 
 # ---------------------------------------------------------------------------
@@ -29,7 +31,13 @@ __all__ = ["Adjacency", "DenseAdj", "EdgeListAdj", "EllAdj", "GNNConfig",
 # ---------------------------------------------------------------------------
 
 class Adjacency:
-    """Abstract aggregation operator: rows = inner vertices, cols = local."""
+    """Abstract aggregation operator: rows = inner vertices, cols = local.
+
+    Every backend provides ``spmm`` and ``degree``; ``spmm_at`` (per-edge
+    values, the GAT edge-softmax path) is a capability — backends that can't
+    express it raise a :class:`NotImplementedError` naming themselves and
+    the ``backend="edges"`` fallback.
+    """
 
     n_rows: int
     n_cols: int
@@ -37,9 +45,21 @@ class Adjacency:
     def spmm(self, h: jnp.ndarray) -> jnp.ndarray:   # [n_cols, d] -> [n_rows, d]
         raise NotImplementedError
 
+    def degree(self) -> jnp.ndarray:
+        """Weighted in-degree per inner row.
+
+        Default: ``spmm`` against a ones column — exact for every backend
+        since padding entries carry zero weight.  Backends with a cheaper
+        closed form override this.
+        """
+        return self.spmm(jnp.ones((self.n_cols, 1), jnp.float32))[:, 0]
+
     def spmm_at(self, e_vals: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
-        """SpMM with per-edge values (GAT); only EdgeListAdj supports it."""
-        raise NotImplementedError
+        """SpMM with externally supplied per-edge values (GAT attention)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support per-edge-value "
+            "aggregation (spmm_at); GAT's edge softmax needs flat edge ids "
+            "— build the adjacency with backend='edges'.")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +132,48 @@ class EllAdj(Adjacency):
         from repro.kernels.ops import ell_spmm
         return ell_spmm(self.cols, self.vals, h, interpret=self.interpret)
 
+    def spmm_at(self, e_vals, h):
+        """SpMM with ELL-shaped per-edge values ``[n_rows, max_deg]``.
+
+        Padding slots (``vals == 0``) are masked out, so callers may pass
+        unmasked attention scores in the same ELL layout.
+        """
+        from repro.kernels.ops import ell_spmm
+        v = jnp.where(self.vals != 0, e_vals, 0.0)
+        return ell_spmm(self.cols, v, h, interpret=self.interpret)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridAdj(Adjacency):
+    """Hybrid blocked-ELL + COO-tail adjacency (Pallas kernel + segment-sum).
+
+    The regular part is packed to the degree quantile; overflow edges of
+    heavy rows live in a COO tail aggregated by segment-sum.  Padded tail
+    entries carry ``tail_dst == n_rows`` and are dropped by the scatter, so
+    the tail arrays may be padded to a static width (stacked runtimes).
+    """
+    cols: jnp.ndarray      # [n_rows, max_deg] local col ids (padded)
+    vals: jnp.ndarray      # [n_rows, max_deg] weights (0 at padding)
+    tail_src: jnp.ndarray  # [mt] local col ids
+    tail_dst: jnp.ndarray  # [mt] inner row ids (n_rows = padding)
+    tail_w: jnp.ndarray    # [mt] weights (0 at padding)
+    n_cols_: int
+    interpret: bool = True
+
+    @property
+    def n_rows(self):
+        return self.cols.shape[0]
+
+    @property
+    def n_cols(self):
+        return self.n_cols_
+
+    def spmm(self, h):
+        from repro.kernels.ops import hybrid_spmm
+        return hybrid_spmm(self.cols, self.vals, self.tail_src,
+                           self.tail_dst, self.tail_w, h,
+                           interpret=self.interpret)
+
 
 def make_local_adj(local_graph: Graph, n_inner: int, backend: str = "edges",
                    interpret: bool = True) -> Adjacency:
@@ -134,7 +196,14 @@ def make_local_adj(local_graph: Graph, n_inner: int, backend: str = "edges",
         cols, vals = ell_pack(src, dst, w, n_inner)
         return EllAdj(jnp.asarray(cols), jnp.asarray(vals), n_cols,
                       interpret=interpret)
-    raise ValueError(backend)
+    if backend == "hybrid":
+        from repro.kernels.ops import ell_pack_hybrid
+        cols, vals, ts, td, tw = ell_pack_hybrid(src, dst, w, n_inner)
+        return HybridAdj(jnp.asarray(cols), jnp.asarray(vals),
+                         jnp.asarray(ts), jnp.asarray(td), jnp.asarray(tw),
+                         n_cols, interpret=interpret)
+    raise ValueError(f"unknown aggregation backend {backend!r}; "
+                     f"expected one of {BACKENDS}")
 
 
 # ---------------------------------------------------------------------------
@@ -195,12 +264,14 @@ def _layer_apply(cfg: GNNConfig, p: dict, adj: Adjacency,
         z = adj.spmm(h_local) @ p["w"] + p["b"]
     elif cfg.model == "sage":
         agg = adj.spmm(h_local)
-        deg = (adj.degree()[:, None] if isinstance(adj, EdgeListAdj)
-               else adj.spmm(jnp.ones((adj.n_cols, 1), h_local.dtype)))
-        agg = agg / jnp.maximum(deg, 1.0)
+        agg = agg / jnp.maximum(adj.degree()[:, None], 1.0)
         z = h_local[:n_inner] @ p["w_self"] + agg @ p["w_neigh"] + p["b"]
     elif cfg.model == "gat":
-        assert isinstance(adj, EdgeListAdj), "GAT needs the edge-list backend"
+        if not isinstance(adj, EdgeListAdj):
+            raise NotImplementedError(
+                f"GAT's edge softmax needs flat edge ids, which the "
+                f"{type(adj).__name__} backend does not expose — build the "
+                "adjacency/runtime with backend='edges' for GAT.")
         h_heads = (h_local @ p["w"]).reshape(h_local.shape[0], p["a_src"].shape[0], -1)
         e_src = jnp.einsum("nhd,hd->nh", h_heads, p["a_src"])
         e_dst = jnp.einsum("nhd,hd->nh", h_heads, p["a_dst"])

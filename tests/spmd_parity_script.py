@@ -3,6 +3,11 @@ runtime on 8 forced host devices and checks numeric parity with the
 single-device stacked oracle.  Exits non-zero on any mismatch.
 
 Invoked as:  python tests/spmd_parity_script.py [--multi-pod]
+                 [--backend edges|ell|hybrid]
+
+``--backend`` swaps the SPMD runtime's local aggregation operator while the
+oracle keeps the edge-list reference — the parity check then covers both
+the collectives lowering and the Pallas kernel backends.
 """
 import os
 import sys
@@ -16,6 +21,8 @@ import jax  # noqa: E402
 
 def main():
     multi_pod = "--multi-pod" in sys.argv
+    backend = (sys.argv[sys.argv.index("--backend") + 1]
+               if "--backend" in sys.argv else "edges")
     import jax.numpy as jnp
     from repro.core import (PROFILES, StalenessController, build_cache_plan,
                             cal_capacity)
@@ -53,7 +60,10 @@ def main():
     else:
         mesh = jax.make_mesh((4,), ("data",))
         axis = "data"
-    spmd = make_spmd_runtime(cfg, sp, xplan, opt, mesh, axis=axis)
+    sp_b = (sp if backend == "edges"
+            else stack_partitions(ps, task, backend=backend))
+    spmd = make_spmd_runtime(cfg, sp_b, xplan, opt, mesh, axis=axis,
+                             backend=backend)
 
     params = init_gnn(jax.random.PRNGKey(7), cfg)
 
@@ -78,7 +88,8 @@ def main():
     # ---- cached step runs and stays finite
     p2b, o2, c_spmd, m3 = spmd.step_cached(p2, o2, c_spmd)
     assert np.isfinite(float(m3["loss"]))
-    print(f"OK multi_pod={multi_pod} loss_refresh={float(m2['loss']):.5f} "
+    print(f"OK multi_pod={multi_pod} backend={backend} "
+          f"loss_refresh={float(m2['loss']):.5f} "
           f"loss_cached={float(m3['loss']):.5f}")
 
 

@@ -24,9 +24,14 @@ def _run(*args):
                           env=env)
 
 
-@pytest.mark.parametrize("flags", [(), ("--multi-pod",)],
-                         ids=["single_pod", "multi_pod"])
+@pytest.mark.parametrize(
+    "flags",
+    [(), ("--multi-pod",), ("--backend", "ell"), ("--backend", "hybrid")],
+    ids=["single_pod", "multi_pod", "ell_backend", "hybrid_backend"])
 def test_spmd_matches_oracle(flags):
+    """The collectives runtime matches the edge-list stacked oracle — for
+    the reference backend and for the Pallas ell/hybrid aggregation
+    backends (oracle stays on edges, so this also cross-checks kernels)."""
     res = _run(*flags)
     assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
     assert "OK" in res.stdout
