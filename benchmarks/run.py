@@ -13,7 +13,7 @@ import time
 
 SUITES = ["halo_obs", "cache_hit", "comm_volume", "rapa_balance",
           "heterogeneous", "convergence", "overall", "kernels_bench",
-          "roofline"]
+          "serve_bench", "roofline"]
 
 
 def main() -> None:

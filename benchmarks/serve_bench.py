@@ -1,0 +1,117 @@
+"""Serving benchmark: precompute cost, then QPS / latency / per-tier hit
+rates of the query engine across the three workload shapes (uniform, zipf,
+bursty) and a fresh-recompute scenario with updated features.
+
+Also asserts the load-bearing parity claim: tiered lookups equal the
+training runtime's ``forward_fresh`` logits.
+
+``REPRO_BENCH_TINY=1`` shrinks the task for CI smoke runs (the Pallas
+gather hot path is exercised either way).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from ._util import BENCH_SCALE, DEFAULT_OUT, bench_task, save
+
+WORKLOADS = ("uniform", "zipf", "bursty")
+
+
+def run(out_dir: str = DEFAULT_OUT, tiny: bool | None = None) -> dict:
+    import jax
+    from repro.core import PROFILES, build_cache_plan, cal_capacity
+    from repro.dist import build_exchange_plan, stack_partitions, \
+        make_sim_runtime
+    from repro.graph import build_partition, metis_partition
+    from repro.models.gnn import GNNConfig, init_gnn
+    from repro.optim import adam
+    from repro.serve import (BatchConfig, GNNServeEngine, make_stream,
+                             precompute_embeddings, rank_hot_nodes,
+                             serve_stream)
+
+    if tiny is None:
+        tiny = bool(int(os.environ.get("REPRO_BENCH_TINY", "0")))
+    if tiny:
+        from repro.data import make_task
+        task = make_task("flickr", scale=BENCH_SCALE["flickr"] / 8,
+                         feat_dim=64)
+        n_queries, max_batch = 512, 32
+    else:
+        task = bench_task("flickr")
+        n_queries, max_batch = 4096, 64
+    g = task.graph
+    ps = build_partition(g, metis_partition(g, 4, seed=0), hops=1)
+
+    cfg = GNNConfig(model="gcn", in_dim=task.features.shape[1],
+                    hidden_dim=64, out_dim=task.num_classes, num_layers=3)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    cap = cal_capacity(ps, cfg.feat_dims, [PROFILES["rtx3090"]] * 4)
+    plan = build_cache_plan(ps, cap, refresh_every=4)
+    xplan = build_exchange_plan(ps, plan)
+    sp = stack_partitions(ps, task)
+    rt = make_sim_runtime(cfg, sp, xplan, adam(1e-2))
+
+    t0 = time.perf_counter()
+    store = precompute_embeddings(cfg, ps, sp, xplan, params)
+    precompute_s = time.perf_counter() - t0
+
+    # parity anchor: tables vs the training runtime's fresh logits
+    stacked = np.asarray(rt.forward_fresh(params))
+    ref = np.zeros_like(store.logits)
+    for i, part in enumerate(ps.parts):
+        ref[part.inner_nodes] = stacked[i, : part.n_inner]
+    parity = float(np.abs(store.logits - ref).max())
+
+    hot_capacity = max(1, g.num_nodes // 10)
+    hot = rank_hot_nodes(g, hot_capacity, ps=ps, policy="degree")
+    by_degree = rank_hot_nodes(g, g.num_nodes, policy="degree")
+    bcfg = BatchConfig(max_batch=max_batch, deadline_ms=2.0)
+
+    rows = {}
+    for kind in WORKLOADS:
+        engine = GNNServeEngine(store, params, g, hot,
+                                features=task.features)
+        stream = make_stream(kind, g.num_nodes, n_queries, qps=500.0,
+                             alpha=1.1, seed=0, rank_to_node=by_degree)
+        rows[kind] = serve_stream(engine, stream, bcfg)
+
+    # fresh-recompute scenario: 1% of nodes get new features.  On these
+    # small dense benchmark graphs the L-hop influence cone of even a few
+    # updates covers most nodes, so nearly every query takes the recompute
+    # path — a shorter stream keeps the (deliberately expensive) row bounded.
+    engine = GNNServeEngine(store, params, g, hot, features=task.features)
+    rng = np.random.default_rng(0)
+    upd = rng.choice(g.num_nodes, max(1, g.num_nodes // 100), replace=False)
+    engine.update_features(
+        upd, task.features[upd]
+        + rng.normal(scale=0.5, size=(upd.size, task.features.shape[1])))
+    stream = make_stream("zipf", g.num_nodes, max(64, n_queries // 8),
+                         qps=500.0, alpha=1.1, seed=0, rank_to_node=by_degree)
+    rows["zipf_fresh"] = {**serve_stream(engine, stream, bcfg),
+                          "stale_nodes": int(engine.stale.sum())}
+
+    out = {"tiny": bool(tiny), "nodes": g.num_nodes,
+           "hot_capacity": hot_capacity, "queries": n_queries,
+           "max_batch": max_batch, "precompute_s": precompute_s,
+           "lookup_parity_max_err": parity, "workloads": rows}
+    save(out_dir, "serve_bench", out)
+    return out
+
+
+def main():
+    out = run()
+    print(f"serve: {out['nodes']} nodes, precompute {out['precompute_s']:.2f}s, "
+          f"lookup parity {out['lookup_parity_max_err']:.2e}")
+    for kind, row in out["workloads"].items():
+        print(f"  {kind:11s}: {row['qps']:8.0f} qps, "
+              f"p50 {row['p50_ms']:6.2f} ms, p99 {row['p99_ms']:6.2f} ms, "
+              f"hot {row['hot_hit_rate']:.2%} / host {row['host_hit_rate']:.2%}"
+              f" / fresh {row['fresh_rate']:.2%}")
+    assert out["lookup_parity_max_err"] <= 1e-5, "serving parity broken"
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,7 @@ def main():
     from repro.launch import serve
     archs = ARCH_IDS if args.all else [args.arch]
     for arch in archs:
-        sys.argv = ["serve", "--arch", arch, "--steps", str(args.steps)]
+        sys.argv = ["serve", "lm", "--arch", arch, "--steps", str(args.steps)]
         serve.main()
 
 

@@ -67,7 +67,10 @@ def main():
     print(json.dumps(out, indent=1))
     if args.ckpt_dir:
         from repro.checkpoint import save_checkpoint
-        save_checkpoint(args.ckpt_dir, args.steps, params)
+        # same payload as repro.launch.train, so `train lm --resume` can
+        # continue from this checkpoint
+        save_checkpoint(args.ckpt_dir, args.steps,
+                        {"params": params, "opt_state": opt_state})
         print("checkpoint saved to", args.ckpt_dir)
 
 

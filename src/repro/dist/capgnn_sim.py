@@ -328,12 +328,14 @@ class TrainReport:
     refresh_steps: int
     cached_steps: int
     wall_time_s: float
+    final_opt_state: object = None   # for checkpoint/resume (launch.train)
 
 
 def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
                  num_parts: int, opt: Optimizer, epochs: int = 100,
                  eval_every: int = 0, controller: StalenessController | None = None,
-                 pipeline: bool = False, seed: int = 0
+                 pipeline: bool = False, seed: int = 0,
+                 params0=None, opt_state0=None
                  ) -> tuple[list, TrainReport]:
     """Full-batch CaPGNN training under the staleness schedule.
 
@@ -344,11 +346,16 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     scheduled refreshes (after warm-up) run as ``step_pipelined`` — the
     refresh payload rides along with the compute instead of a synchronous
     exchange phase; bytes are identical, latency is hidden.
+
+    ``params0``/``opt_state0`` resume from checkpointed state instead of a
+    fresh init (the staleness schedule restarts, whose first step is a
+    refresh — required anyway since the caches start zero-filled).
     """
     if controller is None:
         controller = StalenessController(refresh_every=xplan.refresh_every)
-    params = init_gnn(jax.random.PRNGKey(seed), cfg)
-    opt_state = opt.init(params)
+    params = params0 if params0 is not None else init_gnn(
+        jax.random.PRNGKey(seed), cfg)
+    opt_state = opt_state0 if opt_state0 is not None else opt.init(params)
     caches = init_caches(cfg, xplan, num_parts)
     dims = getattr(runtime, "comm_dims", list(cfg.feat_dims[:cfg.num_layers]))
 
@@ -382,5 +389,5 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
         comm_bytes_vanilla=vanilla,
         comm_reduction=1.0 - comm / max(vanilla, 1),
         refresh_steps=refresh_steps, cached_steps=epochs - refresh_steps,
-        wall_time_s=wall)
+        wall_time_s=wall, final_opt_state=opt_state)
     return params, report

@@ -29,7 +29,7 @@ def run_gnn(args) -> dict:
     from repro.dist import (build_exchange_plan, stack_partitions,
                             make_sim_runtime, train_capgnn)
     from repro.graph import metis_partition, random_partition, build_partition
-    from repro.models.gnn import GNNConfig
+    from repro.models.gnn import GNNConfig, init_gnn
     from repro.optim import adam
 
     task = make_task(args.dataset, scale=args.scale, feat_dim=args.feat_dim,
@@ -63,13 +63,30 @@ def run_gnn(args) -> dict:
                                backend=args.backend)
     ctl = StalenessController(refresh_every=args.refresh_every,
                              adaptive=args.adaptive_staleness)
+
+    # --resume: restore (params, opt_state, epoch) and run the remaining
+    # epochs; --epochs is the *total* budget across runs.
+    start_epoch, params0, opt_state0 = 0, None, None
+    if args.resume and args.ckpt_dir:
+        from repro.checkpoint import latest_step, load_checkpoint
+        step = latest_step(args.ckpt_dir)
+        if step is not None:
+            like = init_gnn(jax.random.PRNGKey(args.seed), cfg)
+            state = load_checkpoint(args.ckpt_dir, step,
+                                    {"params": like,
+                                     "opt_state": opt.init(like)})
+            params0, opt_state0 = state["params"], state["opt_state"]
+            start_epoch = step
+    run_epochs = max(0, args.epochs - start_epoch)
     params, report = train_capgnn(cfg, runtime, xplan, p, opt,
-                                  epochs=args.epochs, controller=ctl,
-                                  pipeline=args.pipeline, seed=args.seed)
+                                  epochs=run_epochs, controller=ctl,
+                                  pipeline=args.pipeline, seed=args.seed,
+                                  params0=params0, opt_state0=opt_state0)
     _, test_acc = runtime.evaluate(params, "test")
     out = {
         "dataset": args.dataset, "model": args.model, "parts": p,
-        "epochs": args.epochs, "final_loss": report.losses[-1],
+        "epochs": args.epochs, "resumed_from": start_epoch,
+        "final_loss": report.losses[-1] if report.losses else None,
         "test_acc": test_acc, "comm_bytes": report.comm_bytes,
         "comm_reduction_vs_vanilla": report.comm_reduction,
         "refresh_steps": report.refresh_steps,
@@ -79,7 +96,9 @@ def run_gnn(args) -> dict:
     print(json.dumps(out, indent=1))
     if args.ckpt_dir:
         from repro.checkpoint import save_checkpoint
-        save_checkpoint(args.ckpt_dir, args.epochs, params)
+        save_checkpoint(args.ckpt_dir, start_epoch + run_epochs,
+                        {"params": params,
+                         "opt_state": report.final_opt_state})
     return out
 
 
@@ -95,12 +114,24 @@ def run_lm(args) -> dict:
     params = init_model(jax.random.PRNGKey(args.seed), cfg)
     opt = adamw(args.lr)
     opt_state = opt.init(params)
+    start_step = 0
+    if args.resume and args.ckpt_dir:
+        from repro.checkpoint import latest_step, load_checkpoint
+        s = latest_step(args.ckpt_dir)
+        if s is not None:
+            state = load_checkpoint(args.ckpt_dir, s,
+                                    {"params": params, "opt_state": opt_state})
+            params, opt_state = state["params"], state["opt_state"]
+            start_step = s
+    run_steps = max(0, args.steps - start_step)
     step = jax.jit(train_step_fn(cfg, opt))
     gen = synthetic_token_batches(cfg.vocab_size, args.seq_len, args.batch,
                                   seed=args.seed)
+    for _ in range(start_step):   # resume the data stream where we left off
+        next(gen)
     losses = []
     t0 = time.perf_counter()
-    for i, host_batch in zip(range(args.steps), gen):
+    for i, host_batch in zip(range(run_steps), gen):
         batch = {"tokens": jnp.asarray(host_batch["tokens"]),
                  "labels": jnp.asarray(host_batch["labels"])}
         if cfg.vision_tokens:
@@ -110,13 +141,17 @@ def run_lm(args) -> dict:
         params, opt_state, metrics = step(params, opt_state, batch)
         losses.append(float(metrics["loss"]))
     wall = time.perf_counter() - t0
-    out = {"arch": cfg.name, "steps": args.steps, "loss_first": losses[0],
-           "loss_last": losses[-1], "tokens_per_s":
-           round(args.steps * args.batch * args.seq_len / wall, 1)}
+    out = {"arch": cfg.name, "steps": args.steps,
+           "resumed_from": start_step,
+           "loss_first": losses[0] if losses else None,
+           "loss_last": losses[-1] if losses else None,
+           "tokens_per_s":
+           round(run_steps * args.batch * args.seq_len / max(wall, 1e-9), 1)}
     print(json.dumps(out, indent=1))
     if args.ckpt_dir:
         from repro.checkpoint import save_checkpoint
-        save_checkpoint(args.ckpt_dir, args.steps, params)
+        save_checkpoint(args.ckpt_dir, start_step + run_steps,
+                        {"params": params, "opt_state": opt_state})
     return out
 
 
@@ -152,6 +187,10 @@ def main():
     g.add_argument("--cpu-cache-gib", type=float, default=4.0)
     g.add_argument("--seed", type=int, default=0)
     g.add_argument("--ckpt-dir", default="")
+    g.add_argument("--resume", action="store_true",
+                   help="restore (params, opt_state, epoch) from the latest "
+                        "checkpoint in --ckpt-dir and train the remaining "
+                        "epochs up to --epochs")
     g.set_defaults(fn=run_gnn)
 
     l = sub.add_parser("lm")
@@ -164,6 +203,10 @@ def main():
     l.add_argument("--lr", type=float, default=3e-4)
     l.add_argument("--seed", type=int, default=0)
     l.add_argument("--ckpt-dir", default="")
+    l.add_argument("--resume", action="store_true",
+                   help="restore (params, opt_state, step) from the latest "
+                        "checkpoint in --ckpt-dir and run the remaining "
+                        "steps up to --steps")
     l.set_defaults(fn=run_lm)
 
     args = ap.parse_args()

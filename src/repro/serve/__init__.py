@@ -1,0 +1,26 @@
+"""GNN inference serving (the ROADMAP's query-traffic axis).
+
+- :mod:`repro.serve.precompute` — partitioned layer-wise full-graph
+  inference through the training runtime's exchange machinery; per-layer
+  global embedding tables, persisted via :mod:`repro.checkpoint`.
+- :mod:`repro.serve.engine` — two-tier (device hot / host) embedding cache
+  with a JACA-style static ranking, a deadline/size micro-batcher, the
+  Pallas row-gather hot path, and a k-hop fresh-recompute mode for updated
+  features.
+- :mod:`repro.serve.workload` — deterministic uniform / zipf / bursty
+  query-stream generators for throughput and latency benchmarks.
+"""
+from .precompute import (EmbeddingStore, load_store, precompute_embeddings,
+                         save_store)
+from .engine import (Batch, BatchConfig, GNNServeEngine, MicroBatcher,
+                     plan_batches, rank_hot_nodes, serve_stream)
+from .workload import (QueryStream, bursty_stream, make_stream,
+                       uniform_stream, zipf_stream, WORKLOAD_KINDS)
+
+__all__ = [
+    "EmbeddingStore", "precompute_embeddings", "save_store", "load_store",
+    "Batch", "BatchConfig", "MicroBatcher", "plan_batches",
+    "GNNServeEngine", "rank_hot_nodes", "serve_stream",
+    "QueryStream", "uniform_stream", "zipf_stream", "bursty_stream",
+    "make_stream", "WORKLOAD_KINDS",
+]

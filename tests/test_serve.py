@@ -1,0 +1,264 @@
+"""repro.serve: precompute parity, the two-tier query engine, the
+micro-batcher, and the workload generators.
+
+The load-bearing claim (ISSUE acceptance): served logits equal the training
+runtime's ``forward_fresh`` oracle to <=1e-5 for every aggregation backend,
+on cached-tier hits and host-tier misses alike; the fresh=k recompute path
+is exact against the single-worker full-graph forward when k >= num_layers.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PROFILES, build_cache_plan, cal_capacity
+from repro.data.gnn_data import FullBatchTask, split_masks
+from repro.dist import build_exchange_plan, make_sim_runtime, stack_partitions
+from repro.graph import (build_partition, metis_partition, rmat,
+                         symmetric_normalize, synth_features)
+from repro.models.gnn import GNNConfig, gnn_forward, init_gnn, make_local_adj
+from repro.optim import adam
+from repro.serve import (BatchConfig, GNNServeEngine, load_store,
+                         make_stream, plan_batches, precompute_embeddings,
+                         rank_hot_nodes, save_store, serve_stream,
+                         zipf_stream, WORKLOAD_KINDS)
+
+BACKENDS = ("edges", "ell", "hybrid")
+_CACHE: dict = {}
+
+
+def _base():
+    """Shared tiny task/partitioning (backend-independent pieces)."""
+    if "base" not in _CACHE:
+        g = rmat(240, 1400, seed=3)
+        feats, labels = synth_features(g, 8, 4, seed=3)
+        gn = symmetric_normalize(g)
+        tr, va, te = split_masks(g.num_nodes, seed=3)
+        task = FullBatchTask(graph=gn, features=feats, labels=labels,
+                             train_mask=tr, val_mask=va, test_mask=te,
+                             num_classes=4)
+        ps = build_partition(gn, metis_partition(gn, 3, seed=3), hops=1)
+        cfg = GNNConfig(model="gcn", in_dim=8, hidden_dim=16, out_dim=4,
+                        num_layers=3)
+        params = init_gnn(jax.random.PRNGKey(0), cfg)
+        cap = cal_capacity(ps, cfg.feat_dims,
+                           [PROFILES["rtx3090"]] * ps.num_parts)
+        xplan = build_exchange_plan(ps, build_cache_plan(ps, cap,
+                                                         refresh_every=2))
+        _CACHE["base"] = (task, ps, cfg, params, xplan)
+    return _CACHE["base"]
+
+
+def _bundle(backend):
+    """Per-backend stacked layout, runtime oracle, and embedding store."""
+    if backend not in _CACHE:
+        task, ps, cfg, params, xplan = _base()
+        sp = stack_partitions(ps, task, backend=backend)
+        rt = make_sim_runtime(cfg, sp, xplan, adam(1e-2), backend=backend)
+        store = precompute_embeddings(cfg, ps, sp, xplan, params,
+                                      backend=backend)
+        stacked = np.asarray(rt.forward_fresh(params))
+        ref = np.zeros((task.graph.num_nodes, cfg.out_dim), np.float32)
+        for i, part in enumerate(ps.parts):
+            ref[part.inner_nodes] = stacked[i, : part.n_inner]
+        _CACHE[backend] = (store, ref)
+    return _CACHE[backend]
+
+
+# ------------------------------------------------------------- precompute
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_precompute_matches_forward_fresh(backend):
+    """The final table is the training oracle's fresh logits, per backend."""
+    _, _, _, _, _ = _base()
+    store, ref = _bundle(backend)
+    np.testing.assert_allclose(store.logits, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_store_roundtrip(tmp_path):
+    store, _ = _bundle("edges")
+    save_store(str(tmp_path), store)
+    got = load_store(str(tmp_path))
+    assert got.backend == store.backend
+    assert got.cfg == store.cfg
+    for a, b in zip(store.tables, got.tables):
+        np.testing.assert_array_equal(a, b)
+    with pytest.raises(FileNotFoundError):
+        load_store(str(tmp_path / "empty"))
+
+
+# ----------------------------------------------------------------- engine
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_parity_hot_and_host(backend):
+    """Tiered lookups == forward_fresh oracle, with both tiers exercised."""
+    task, ps, cfg, params, _ = _base()
+    store, ref = _bundle(backend)
+    g = task.graph
+    hot = rank_hot_nodes(g, 40, ps=ps, policy="degree")
+    engine = GNNServeEngine(store, params, g, hot, features=task.features)
+    q = np.arange(0, g.num_nodes, 3)
+    out = engine.lookup(q)
+    assert engine.stats["hot_hits"] > 0, "hot tier never hit"
+    assert engine.stats["host_hits"] > 0, "host tier never hit"
+    assert engine.stats["hot_hits"] + engine.stats["host_hits"] == q.size
+    np.testing.assert_allclose(out, ref[q], rtol=1e-5, atol=1e-5)
+
+
+def test_rank_hot_nodes_policies():
+    task, ps, _, _, _ = _base()
+    g = task.graph
+    _, dst = g.edges()
+    deg = np.bincount(dst, minlength=g.num_nodes)
+    hot = rank_hot_nodes(g, 10, policy="degree")
+    assert deg[hot].min() >= np.sort(deg)[-10]      # the top-degree nodes
+    ov = rank_hot_nodes(g, 10, ps=ps, policy="overlap")
+    assert ov.size == 10
+    with pytest.raises(ValueError, match="PartitionSet"):
+        rank_hot_nodes(g, 10, policy="overlap")
+    with pytest.raises(ValueError, match="nope"):
+        rank_hot_nodes(g, 10, policy="nope")
+
+
+def test_fresh_recompute_is_exact():
+    """fresh=num_layers recompute == full-graph forward on updated features;
+    clean queries keep coming from the cache tiers."""
+    task, ps, cfg, params, _ = _base()
+    store, _ = _bundle("edges")
+    g = task.graph
+    engine = GNNServeEngine(store, params, g,
+                            rank_hot_nodes(g, 40, policy="degree"),
+                            features=task.features)
+    upd = np.array([5, 77])
+    newf = task.features.copy()
+    newf[upd] += 1.5
+    engine.update_features(upd, newf[upd])
+    assert engine.stale[upd].all()
+
+    q = np.arange(0, g.num_nodes, 3)
+    out = engine.query(q)
+    adj = make_local_adj(g, g.num_nodes, backend="edges")
+    oracle = np.asarray(gnn_forward(cfg, params, adj, jnp.asarray(newf),
+                                    None))
+    np.testing.assert_allclose(out, oracle[q], rtol=1e-5, atol=1e-5)
+    n_stale = int(engine.stale[q].sum())
+    assert engine.stats["fresh_recomputes"] == n_stale
+    assert engine.stats["hot_hits"] + engine.stats["host_hits"] \
+        == q.size - n_stale
+
+
+def test_stale_marking_is_forward_cone():
+    """Only nodes reachable within num_layers forward hops go stale."""
+    task, _, cfg, params, _ = _base()
+    store, _ = _bundle("edges")
+    g = task.graph
+    engine = GNNServeEngine(store, params, g, np.zeros(0, np.int64),
+                            features=task.features)
+    upd = np.array([0])
+    engine.update_features(upd, task.features[upd] + 1.0)
+    src, dst = g.edges()
+    seen = np.zeros(g.num_nodes, bool)
+    seen[0] = True
+    for _ in range(cfg.num_layers):
+        seen[dst[seen[src]]] = True
+    np.testing.assert_array_equal(engine.stale, seen)
+
+
+def test_serve_stream_report():
+    task, _, _, params, _ = _base()
+    store, ref = _bundle("edges")
+    g = task.graph
+    engine = GNNServeEngine(store, params, g,
+                            rank_hot_nodes(g, 40, policy="degree"),
+                            features=task.features)
+    stream = zipf_stream(g.num_nodes, 300, qps=3000.0, alpha=1.2, seed=0,
+                         rank_to_node=rank_hot_nodes(g, g.num_nodes,
+                                                     policy="degree"))
+    rep = serve_stream(engine, stream, BatchConfig(max_batch=32,
+                                                   deadline_ms=2.0))
+    assert rep["queries"] == 300
+    assert rep["qps"] > 0 and rep["busy_s"] > 0
+    assert rep["p99_ms"] >= rep["p50_ms"] >= 0
+    assert rep["hot_hit_rate"] + rep["host_hit_rate"] \
+        + rep["fresh_rate"] == pytest.approx(1.0)
+    assert rep["hot_hit_rate"] > 0.3   # zipf head aligned with the hot tier
+
+
+# ----------------------------------------------------- micro-batcher props
+
+@st.composite
+def batcher_case(draw):
+    n = draw(st.integers(1, 120))
+    seed = draw(st.integers(0, 2 ** 16))
+    max_batch = draw(st.integers(1, 12))
+    deadline_ms = draw(st.integers(1, 40))
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(0.004, n))
+    return times, BatchConfig(max_batch=max_batch,
+                              deadline_ms=float(deadline_ms))
+
+
+@given(batcher_case())
+@settings(max_examples=60, deadline=None)
+def test_microbatcher_invariants(case):
+    """No query dropped or duplicated, order kept, size and deadline
+    bounds respected, seal times monotone."""
+    times, cfg = case
+    batches = plan_batches(times, cfg)
+    got = np.concatenate([b.idx for b in batches])
+    np.testing.assert_array_equal(got, np.arange(times.size))
+    prev_close = -np.inf
+    for b in batches:
+        assert 1 <= b.idx.size <= cfg.max_batch
+        assert b.close_time - times[b.idx[0]] <= cfg.deadline_s + 1e-9
+        assert b.close_time >= times[b.idx].max() - 1e-9
+        assert b.close_time >= prev_close - 1e-9
+        prev_close = b.close_time
+
+
+def test_plan_batches_empty():
+    assert plan_batches(np.zeros(0), BatchConfig()) == []
+
+
+# --------------------------------------------------------- workload props
+
+def test_streams_deterministic_and_valid():
+    for kind in WORKLOAD_KINDS:
+        a = make_stream(kind, 500, 300, qps=800.0, alpha=1.2, seed=7)
+        b = make_stream(kind, 500, 300, qps=800.0, alpha=1.2, seed=7)
+        np.testing.assert_array_equal(a.t, b.t)
+        np.testing.assert_array_equal(a.node, b.node)
+        assert a.kind == kind and a.num_queries == 300
+        assert np.all(np.diff(a.t) >= 0) and a.t[0] >= 0
+        assert a.node.min() >= 0 and a.node.max() < 500
+    c = make_stream("zipf", 500, 300, qps=800.0, alpha=1.2, seed=7)
+    d = make_stream("zipf", 500, 300, qps=800.0, alpha=1.2, seed=8)
+    assert not np.array_equal(c.node, d.node)   # the seed actually matters
+    with pytest.raises(ValueError, match="workload"):
+        make_stream("nope", 10, 10)
+
+
+@st.composite
+def zipf_case(draw):
+    n_nodes = draw(st.integers(50, 400))
+    q = draw(st.integers(100, 400))
+    seed = draw(st.integers(0, 2 ** 16))
+    lo_q = draw(st.integers(0, 8))
+    d_q = draw(st.integers(1, 8))
+    a_lo = 0.25 + lo_q * 0.25
+    return n_nodes, q, seed, a_lo, a_lo + d_q * 0.25
+
+
+@given(zipf_case())
+@settings(max_examples=25, deadline=None)
+def test_zipf_skew_monotone_in_alpha(case):
+    """Inverse-CDF sampling: under a fixed seed, raising the exponent never
+    raises any sampled rank, so head concentration is monotone."""
+    n, q, seed, a_lo, a_hi = case
+    ident = np.arange(n)
+    lo = zipf_stream(n, q, alpha=a_lo, seed=seed, rank_to_node=ident)
+    hi = zipf_stream(n, q, alpha=a_hi, seed=seed, rank_to_node=ident)
+    assert np.all(hi.node <= lo.node)            # pointwise, same uniforms
+    m = max(1, n // 20)
+    assert np.mean(hi.node < m) >= np.mean(lo.node < m)

@@ -202,3 +202,40 @@ def test_zero_capacity_plan_is_vanilla():
     assert xplan.local.n_rows == 0
     assert xplan.glob.n_unique == 0
     assert xplan.uncached.n_rows == ps.total_halo()
+
+
+def test_train_resume_roundtrip(tmp_path):
+    """launch.train gnn --resume: two 4-epoch runs through a checkpoint
+    reproduce one straight 8-epoch run exactly (params, opt state and the
+    refresh schedule all round-trip; pipeline off so the refresh-step
+    numerics are schedule-independent)."""
+    import argparse
+    from repro.checkpoint import latest_step
+    from repro.launch.train import run_gnn
+
+    base = dict(dataset="flickr", scale=0.008, feat_dim=16, model="gcn",
+                backend="edges", hidden=16, layers=2, parts=2,
+                partitioner="metis", epochs=8, lr=0.01, jaca=True,
+                rapa=False, pipeline=False, refresh_every=4,
+                adaptive_staleness=False, cpu_cache_gib=1.0, seed=0,
+                ckpt_dir="", resume=False)
+    straight = run_gnn(argparse.Namespace(**base))
+
+    d = str(tmp_path / "ck")
+    first = run_gnn(argparse.Namespace(**{**base, "epochs": 4,
+                                          "ckpt_dir": d}))
+    assert first["resumed_from"] == 0
+    assert latest_step(d) == 4
+    second = run_gnn(argparse.Namespace(**{**base, "ckpt_dir": d,
+                                           "resume": True}))
+    assert second["resumed_from"] == 4
+    assert latest_step(d) == 8
+    np.testing.assert_allclose(second["final_loss"], straight["final_loss"],
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(second["test_acc"], straight["test_acc"],
+                               rtol=1e-6, atol=1e-7)
+    # resuming past the budget is a no-op that keeps the checkpoint intact
+    third = run_gnn(argparse.Namespace(**{**base, "ckpt_dir": d,
+                                          "resume": True}))
+    assert third["resumed_from"] == 8 and third["final_loss"] is None
+    assert latest_step(d) == 8
