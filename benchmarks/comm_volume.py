@@ -1,16 +1,26 @@
 """Paper Figs. 16-19: epoch time & communication volume vs cache capacity,
-plus the overhead / benefit-to-overhead ratios of the caching machinery.
+plus the overhead / benefit-to-overhead ratios of the caching machinery —
+and the halo-transport sweep: modeled vs HLO-measured wire bytes and
+pipelined vs unpipelined step time for ``transport="allgather" | "p2p"``.
 
 Byte counts are exact (plan properties); wall time is CPU wall time of the
 compiled stacked runtime.  The paper's check_cache/pick_cache bookkeeping
 maps here to (a) the host-side plan build and (b) the cache scatter/gather
 ops inside the step; (a) is measured directly, (b) rides in the step time.
+
+The transport sweep needs a multi-device mesh, so it re-execs this module
+in a subprocess with ``--xla_force_host_platform_device_count=4`` and
+merges the child's JSON into ``experiments/comm_volume.json``.
+``REPRO_BENCH_TINY=1`` shrinks both parts for CI smoke runs.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import subprocess
+import sys
 import time
-
-import numpy as np
 
 from repro.core import (CacheCapacity, StalenessController, build_cache_plan,
                         comm_bytes_per_step)
@@ -18,12 +28,13 @@ from repro.dist import build_exchange_plan, make_sim_runtime, stack_partitions, 
 from repro.graph import build_partition, metis_partition
 from repro.models.gnn import GNNConfig
 from repro.optim import adam
-from ._util import DEFAULT_OUT, Timer, bench_task, save
+from ._util import BENCH_SCALE, DEFAULT_OUT, Timer, bench_task, save
 
 EPOCHS = 12
 
 
-def _one(task, ps, cap_frac: float, parts: int, refresh_every: int = 4):
+def _one(task, ps, cap_frac: float, parts: int, refresh_every: int = 4,
+         epochs: int = EPOCHS):
     max_halo = max(pt.n_halo for pt in ps.parts)
     cap = max(0, int(cap_frac * max_halo))
     cfg = GNNConfig(model="gcn", in_dim=task.features.shape[1],
@@ -37,12 +48,13 @@ def _one(task, ps, cap_frac: float, parts: int, refresh_every: int = 4):
     runtime = make_sim_runtime(cfg, sp, xplan, opt)
     ctl = StalenessController(refresh_every=refresh_every)
     with Timer() as t_train:
-        _, rep = train_capgnn(cfg, runtime, xplan, parts, opt, epochs=EPOCHS,
+        _, rep = train_capgnn(cfg, runtime, xplan, parts, opt, epochs=epochs,
                               controller=ctl, eval_every=0)
-    vol = comm_bytes_per_step(plan, cfg.hidden_dim)
+    vol = comm_bytes_per_step(plan, cfg.hidden_dim,
+                              dtype_bytes=runtime.halo_dtype_bytes)
     return {
         "cap_frac": cap_frac, "capacity": cap,
-        "epoch_time_s": t_train.seconds / EPOCHS,
+        "epoch_time_s": t_train.seconds / epochs,
         "plan_build_s": t_plan.seconds,
         "comm_bytes": rep.comm_bytes,
         "comm_bytes_vanilla": rep.comm_bytes_vanilla,
@@ -51,21 +63,157 @@ def _one(task, ps, cap_frac: float, parts: int, refresh_every: int = 4):
     }
 
 
-def run(out_dir: str = DEFAULT_OUT) -> dict:
-    task = bench_task("reddit")
+# ------------------------------------------------------- transport sweep
+
+def _time_step(fn, params, opt, cfg, xplan, parts, repeats: int = 5,
+               inner: int = 2) -> float:
+    """Best-of-``repeats`` per-step seconds of a donated jitted step,
+    chaining the returned state (steady-state loop)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.dist import init_caches
+
+    pp = jax.tree.map(jnp.copy, params)
+    oo = opt.init(pp)
+    cc = init_caches(cfg, xplan, parts)
+    pp, oo, cc, m = fn(pp, oo, cc)          # compile + warm-up
+    jax.block_until_ready(m["loss"])
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            pp, oo, cc, m = fn(pp, oo, cc)
+        jax.block_until_ready(m["loss"])
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best
+
+
+def transport_sweep(tiny: bool, transports=("allgather", "p2p")) -> dict:
+    """Runs in the forced-4-device child process: modeled vs HLO-measured
+    wire bytes and pipelined vs unpipelined step time per transport on the
+    flickr-scale benchmark config."""
+    import jax
+    jax.devices()           # lock the forced host device count first
+    import jax.numpy as jnp
+    from repro.core import PROFILES, cal_capacity
+    from repro.data import make_task
+    from repro.dist import init_caches
+    from repro.dist.capgnn_spmd import make_spmd_runtime
+    from repro.launch.dryrun import collective_bytes
+    from repro.models.gnn import init_gnn
+    from repro.optim import adam as mk_adam
+
+    parts = 4
+    scale = BENCH_SCALE["flickr"] / (8 if tiny else 1)
+    task = make_task("flickr", scale=scale, feat_dim=64)
+    ps = build_partition(task.graph,
+                         metis_partition(task.graph, parts, seed=0), hops=1)
+    cfg = GNNConfig(model="gcn", in_dim=task.features.shape[1],
+                    hidden_dim=128, out_dim=task.num_classes, num_layers=3)
+    cap = cal_capacity(ps, cfg.feat_dims, [PROFILES["rtx3090"]] * parts)
+    plan = build_cache_plan(ps, cap, refresh_every=4)
+    xplan = build_exchange_plan(ps, plan)
+    sp = stack_partitions(ps, task)
+    opt = mk_adam(0.01)
+    mesh = jax.make_mesh((parts,), ("data",))
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+
+    out = {"parts": parts, "num_nodes": int(task.graph.num_nodes),
+           "tiny": bool(tiny), "transports": {}}
+    for transport in transports:
+        rt = make_spmd_runtime(cfg, sp, xplan, opt, mesh,
+                               transport=transport)
+        row = {}
+        for refresh, key in ((False, "cached"), (True, "refresh")):
+            row[f"modeled_{key}_bytes"] = sum(
+                xplan.bytes_per_step(d, refresh=refresh,
+                                     dtype_bytes=rt.halo_dtype_bytes)
+                for d in rt.comm_dims)
+            row[f"{key}_rows"] = rt.wire_rows(refresh)
+            row[f"{key}_rows_padded"] = rt.wire_rows(refresh, padded=True)
+        # HLO-measured per-device collective bytes of one compiled step
+        # (includes static-shape padding and grad-transpose collectives)
+        pp = jax.tree.map(jnp.copy, params)
+        oo = opt.init(pp)
+        cc = init_caches(cfg, xplan, parts)
+        for name, fn in (("cached", rt.step_cached),
+                         ("refresh", rt.step_refresh),
+                         ("pipelined", rt.step_pipelined)):
+            hlo = fn.lower(pp, oo, cc).compile().as_text()
+            cb = collective_bytes(hlo)
+            row[f"hlo_{name}_collective_bytes_per_device"] = cb["total"]
+            row[f"hlo_{name}_collective_counts"] = cb["counts"]
+        row["cached_ms"] = _time_step(rt.step_cached, params, opt, cfg,
+                                      xplan, parts) * 1e3
+        row["refresh_unpipelined_ms"] = _time_step(
+            rt.step_refresh, params, opt, cfg, xplan, parts) * 1e3
+        row["pipelined_ms"] = _time_step(rt.step_pipelined, params, opt,
+                                         cfg, xplan, parts) * 1e3
+        out["transports"][transport] = row
+
+    if "p2p" in out["transports"]:
+        p2p = out["transports"]["p2p"]
+        refresh_rows = p2p["refresh_rows"]
+        out["p2p_rows_match_plan"] = bool(
+            refresh_rows["uncached"] == xplan.uncached.n_rows
+            and refresh_rows["local"] == xplan.local.n_rows
+            and refresh_rows["global"] == xplan.glob.n_unique)
+        out["pipelined_leq_unpipelined_p2p"] = bool(
+            p2p["pipelined_ms"] <= p2p["refresh_unpipelined_ms"])
+        out["p2p_pipeline_speedup"] = (
+            p2p["refresh_unpipelined_ms"] / max(p2p["pipelined_ms"], 1e-9))
+        if "allgather" in out["transports"]:
+            ag = out["transports"]["allgather"]
+            out["p2p_vs_allgather_row_ratio"] = (
+                refresh_rows["total"]
+                / max(1, ag["refresh_rows"]["total"]))
+    return out
+
+
+def _transport_sweep_subprocess(tiny: bool,
+                                transports=("allgather", "p2p")) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["REPRO_BENCH_TINY"] = "1" if tiny else "0"
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.comm_volume",
+         "--transport-sweep-child", "--transport", *transports],
+        capture_output=True, text=True, timeout=3600, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    if res.returncode != 0:
+        raise RuntimeError("transport sweep child failed:\n"
+                           + res.stdout[-2000:] + res.stderr[-2000:])
+    return json.loads(res.stdout.splitlines()[-1])
+
+
+def run(out_dir: str = DEFAULT_OUT, tiny: bool | None = None,
+        transports=("allgather", "p2p")) -> dict:
+    if tiny is None:
+        tiny = bool(int(os.environ.get("REPRO_BENCH_TINY", "0")))
+    if tiny:
+        from repro.data import make_task
+        task = make_task("reddit", scale=BENCH_SCALE["reddit"] / 4,
+                         feat_dim=64)
+        part_counts, fracs, epochs = (2, 4), (0.0, 0.3, 1.0), 4
+    else:
+        task = bench_task("reddit")
+        part_counts, fracs, epochs = (2, 4), (0.0, 0.1, 0.3, 0.6, 1.0), EPOCHS
     g = task.graph
     sweeps = {}
-    for parts in (2, 4):
+    for parts in part_counts:
         ps = build_partition(g, metis_partition(g, parts, seed=0), hops=1)
-        rows = [_one(task, ps, f, parts) for f in (0.0, 0.1, 0.3, 0.6, 1.0)]
+        rows = [_one(task, ps, f, parts, epochs=epochs) for f in fracs]
         sweeps[f"{parts}p"] = rows
 
     # Fig. 19 ratios at the 4-partition full-capacity point
     base = sweeps["4p"][0]          # no cache
     best = sweeps["4p"][-1]         # full cache
-    overhead_s = best["plan_build_s"] / EPOCHS
+    overhead_s = best["plan_build_s"] / epochs
     saved_s = base["epoch_time_s"] - best["epoch_time_s"]
     out = {
+        "tiny": bool(tiny),
         "sweeps": sweeps,
         # any non-zero cache beats no cache; the sweep is NOT monotone in
         # capacity because mid-size caches route more vertices through the
@@ -79,13 +227,28 @@ def run(out_dir: str = DEFAULT_OUT) -> dict:
         "benefit_to_overhead": saved_s / max(overhead_s, 1e-9),
         "max_comm_reduction": max(r["comm_reduction"]
                                   for rows in sweeps.values() for r in rows),
+        "transport_sweep": _transport_sweep_subprocess(tiny, transports),
     }
     save(out_dir, "comm_volume", out)
     return out
 
 
-def main():
-    out = run()
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--transport-sweep-child", action="store_true",
+                    help="internal: run only the transport sweep in this "
+                         "(forced multi-device) process, JSON on stdout")
+    ap.add_argument("--transport", nargs="*",
+                    default=["allgather", "p2p"],
+                    choices=["allgather", "p2p"],
+                    help="which halo transports the sweep times/records")
+    # parse_known_args: tolerate the benchmarks.run orchestrator's flags
+    args, _ = ap.parse_known_args(argv)
+    if args.transport_sweep_child:
+        tiny = bool(int(os.environ.get("REPRO_BENCH_TINY", "0")))
+        print(json.dumps(transport_sweep(tiny, tuple(args.transport))))
+        return
+    out = run(transports=tuple(args.transport))
     print(f"comm_volume: cache beats no cache = {out['cache_beats_no_cache']},"
           f" max reduction = {out['max_comm_reduction']:.1%}")
     for k, rows in out["sweeps"].items():
@@ -94,6 +257,22 @@ def main():
         print(f"  {k}: reduction by cap frac {line}")
     print(f"  overhead ratio {out['overhead_ratio']:.4f}, "
           f"benefit/overhead {out['benefit_to_overhead']:.1f}")
+    ts = out["transport_sweep"]
+    for t, row in ts["transports"].items():
+        print(f"  transport {t:9s}: refresh rows "
+              f"{row['refresh_rows']['total']:7d} "
+              f"(padded {row['refresh_rows_padded']['total']:7d}), "
+              f"hlo refresh coll {row['hlo_refresh_collective_bytes_per_device']:.2e} B/dev, "
+              f"cached {row['cached_ms']:.1f} ms, "
+              f"refresh {row['refresh_unpipelined_ms']:.1f} ms, "
+              f"pipelined {row['pipelined_ms']:.1f} ms")
+    if "p2p_rows_match_plan" in ts:
+        print(f"  p2p rows match plan = {ts['p2p_rows_match_plan']}, "
+              f"p2p/allgather rows = "
+              f"{ts.get('p2p_vs_allgather_row_ratio', float('nan')):.2f}, "
+              f"pipelined<=unpipelined(p2p) = "
+              f"{ts['pipelined_leq_unpipelined_p2p']}"
+              f" (speedup {ts['p2p_pipeline_speedup']:.2f}x)")
 
 
 if __name__ == "__main__":

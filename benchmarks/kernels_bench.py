@@ -58,13 +58,17 @@ def _backend_sweep(task, ps, epochs: int = 2) -> dict:
         logits = np.asarray(rt.forward_fresh(params))
         if logits_ref is None:
             logits_ref = logits
-        opt_state = opt.init(params)
+        # the jitted steps donate their inputs: chain the returned state
+        # (the realistic steady-state loop) instead of re-using arguments
+        p_b = jax.tree.map(jnp.copy, params)
+        opt_state = opt.init(p_b)
         caches = init_caches(cfg, xplan, ps.num_parts)
-        jax.block_until_ready(                      # compile + run warm-up
-            rt.step_refresh(params, opt_state, caches))
+        p_b, opt_state, caches, m = rt.step_refresh(p_b, opt_state, caches)
+        jax.block_until_ready(m["loss"])            # compile + run warm-up
         t0 = time.perf_counter()
         for _ in range(epochs):
-            _, _, _, m = rt.step_refresh(params, opt_state, caches)
+            p_b, opt_state, caches, m = rt.step_refresh(p_b, opt_state,
+                                                        caches)
         jax.block_until_ready(m["loss"])
         row = {"step_ms": (time.perf_counter() - t0) / epochs * 1e3,
                "logit_max_diff": float(np.abs(logits - logits_ref).max())}

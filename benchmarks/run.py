@@ -3,17 +3,64 @@
     PYTHONPATH=src python -m benchmarks.run [--only name ...]
 
 Each suite writes experiments/<name>.json and prints a summary line; the
-final PASS/FAIL recap checks the paper's qualitative claims hold.
+final PASS/FAIL recap checks the paper's qualitative claims hold.  After
+every invocation (even a --only subset) the orchestrator folds the
+top-level scalars of ALL experiments/*.json into a single
+experiments/bench_summary.json, so the perf trajectory stays trackable
+across PRs from one artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
 SUITES = ["halo_obs", "cache_hit", "comm_volume", "rapa_balance",
           "heterogeneous", "convergence", "overall", "kernels_bench",
           "serve_bench", "roofline"]
+
+_SUMMARY = "bench_summary"
+
+
+def summarize(out_dir: str) -> dict:
+    """Fold every experiments/*.json into one summary: per file, the
+    top-level scalar fields (the headline numbers each suite promotes)
+    plus the file's mtime.  Nested sweeps stay in their own files."""
+    summary = {}
+    for fname in sorted(os.listdir(out_dir)):
+        if not fname.endswith(".json") or fname == _SUMMARY + ".json":
+            continue
+        path = os.path.join(out_dir, fname)
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError) as exc:
+            summary[fname[:-5]] = {"unreadable": repr(exc)}
+            continue
+        scalars = {k: v for k, v in payload.items()
+                   if isinstance(v, (int, float, bool, str))}
+        # transport sweep headline numbers live one level down
+        ts = payload.get("transport_sweep")
+        if isinstance(ts, dict):
+            scalars.update({f"transport_{k}": v for k, v in ts.items()
+                            if isinstance(v, (int, float, bool))})
+        scalars["_mtime"] = time.strftime(
+            "%Y-%m-%dT%H:%M:%S", time.gmtime(os.path.getmtime(path)))
+        summary[fname[:-5]] = scalars
+    return summary
+
+
+def write_summary(out_dir: str | None = None) -> str:
+    if out_dir is None:
+        out_dir = os.path.join(os.path.dirname(__file__), "..",
+                               "experiments")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, _SUMMARY + ".json")
+    with open(path, "w") as f:
+        json.dump(summarize(out_dir), f, indent=1, sort_keys=True)
+    return path
 
 
 def main() -> None:
@@ -38,7 +85,8 @@ def main() -> None:
         print(f"--- {name} done in {time.perf_counter() - t0:.1f}s\n",
               flush=True)
 
-    print("=== summary ===")
+    path = write_summary()
+    print(f"=== summary (aggregated -> {os.path.relpath(path)}) ===")
     for name in names:
         print(f"  {name:15s} {results[name]}")
     if failures:

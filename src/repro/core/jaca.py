@@ -281,8 +281,11 @@ def comm_bytes_per_step(plan: CachePlan, feat_dim: int,
     paper's point-to-point transport model and equal the row counts of the
     compiled exchange plan's index sets
     (``repro.dist.ExchangePlan.bytes_per_step``, asserted by the tier-1
-    suite); the SPMD runtime's ``all_gather`` emulation of that transport
-    moves more on the wire.
+    suite).  The SPMD runtime's ``transport="p2p"`` (per-peer packed
+    ``ppermute`` blocks) ships exactly these rows on the wire; only the
+    legacy ``transport="allgather"`` broadcast moves more (~P x).
+    ``dtype_bytes`` must be the actual halo payload width — 4 for f32,
+    2 when the runtimes run with ``halo_dtype="bf16"``.
     """
     n_un = sum(w.uncached_pos.size for w in plan.workers)
     n_local = sum(w.local_pos.size for w in plan.workers)

@@ -16,7 +16,11 @@ Three step flavours (paper §4.2/§4.3):
   the uncached tier is exchanged.  Caches unchanged.
 - ``step_pipelined`` — same numerics as ``step_cached`` (consumes the same
   stale tiers) but *additionally* emits this step's fresh cache rows, the
-  way the pipeline overlaps the refresh transfer with compute.
+  way the pipeline overlaps the refresh transfer with compute.  On the
+  single-device oracle that is a numerics statement only; the SPMD
+  runtime's ``transport="p2p"`` implements the overlap for real
+  (double-buffered ``ppermute`` rings interleaved with the layer loop —
+  see :mod:`repro.dist.capgnn_spmd`).
 """
 from __future__ import annotations
 
@@ -38,7 +42,23 @@ from .exchange import ExchangePlan, ExchangeTier, GlobalTier, StackedParts
 
 __all__ = ["make_sim_runtime", "SimRuntime", "init_caches", "train_capgnn",
            "TrainReport", "RUNTIME_BACKENDS", "check_backend",
-           "make_adj_builder"]
+           "make_adj_builder", "halo_dtype_info"]
+
+
+def halo_dtype_info(halo_dtype) -> tuple:
+    """Normalise the halo payload dtype knob -> ``(cast dtype | None, bytes)``.
+
+    ``None``/f32 ships halo rows at full width; ``"bf16"`` casts the
+    payload before transport and dequantises back to the compute dtype on
+    scatter — halving every tier's wire bytes (threaded through
+    :meth:`~repro.dist.ExchangePlan.bytes_per_step` via ``dtype_bytes``).
+    """
+    if halo_dtype in (None, "f32", "fp32", "float32", jnp.float32):
+        return None, 4
+    if halo_dtype in ("bf16", "bfloat16", jnp.bfloat16):
+        return jnp.bfloat16, 2
+    raise ValueError(f"unknown halo_dtype {halo_dtype!r}; "
+                     "expected None, 'f32' or 'bf16'")
 
 
 # ---------------------------------------------------------------------------
@@ -66,16 +86,22 @@ def _glob_dict(g: GlobalTier) -> dict:
     }
 
 
-def _pull(td: dict, h: jnp.ndarray) -> jnp.ndarray:
+def _pull(td: dict, h: jnp.ndarray, halo_dtype=None) -> jnp.ndarray:
     """Gather one tier's rows from the stacked inner matrix ``h [P,NI,d]``.
 
     Owners pack their send buffers, consumers address the payload by
     (src_part, src_slot).  Invalid (padding) rows are zeroed so they can be
-    cached or compared without carrying garbage.  Returns ``[P, R, d]``.
+    cached or compared without carrying garbage.  ``halo_dtype`` casts the
+    packed payload before "transport" and dequantises the addressed rows
+    back to ``h.dtype`` (the compressed-wire numerics the SPMD runtime
+    applies for real).  Returns ``[P, R, d]``.
     """
     p = h.shape[0]
     payload = h[jnp.arange(p)[:, None], td["send_row"]]          # [P, S, d]
+    if halo_dtype is not None:
+        payload = payload.astype(halo_dtype)
     rows = payload[td["recv_src_part"], td["recv_src_slot"]]     # [P, R, d]
+    rows = rows.astype(h.dtype)
     return jnp.where(td["recv_valid"][..., None], rows, 0.0)
 
 
@@ -89,11 +115,16 @@ def _scatter(halo: jnp.ndarray, pos: jnp.ndarray, rows: jnp.ndarray,
     return halo.at[pidx, pos_eff].set(rows, mode="drop")
 
 
-def _build_global(gd: dict, h: jnp.ndarray) -> jnp.ndarray:
-    """Fill the deduplicated global buffer ``[G, d]`` from owners' rows."""
+def _build_global(gd: dict, h: jnp.ndarray, halo_dtype=None) -> jnp.ndarray:
+    """Fill the deduplicated global buffer ``[G, d]`` from owners' rows.
+    The buffer is stored dequantised (compute dtype); with ``halo_dtype``
+    the owners' payload is cast before transport, so the buffer carries
+    exactly the rows a compressed wire delivers."""
     p = h.shape[0]
     payload = h[jnp.arange(p)[:, None], gd["send_row"]]          # [P, S, d]
-    return payload[gd["src_part"], gd["src_slot"]]               # [G, d]
+    if halo_dtype is not None:
+        payload = payload.astype(halo_dtype)
+    return payload[gd["src_part"], gd["src_slot"]].astype(h.dtype)  # [G, d]
 
 
 def _read_global(gd: dict, buf: jnp.ndarray, halo: jnp.ndarray) -> jnp.ndarray:
@@ -198,11 +229,13 @@ class SimRuntime:
     evaluate: Callable
     caches0: dict
     backend: str = "edges"
+    halo_dtype_bytes: int = 4   # actual wire width per halo payload entry
 
 
 def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                      opt: Optimizer, exchange_layer0: bool = True,
-                     backend: str = "edges", interpret: bool = True
+                     backend: str = "edges", interpret: bool = True,
+                     halo_dtype=None, donate: bool = True
                      ) -> SimRuntime:
     """Build the jitted stacked-oracle runtime.
 
@@ -215,8 +248,20 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
     ``"hybrid"`` (Pallas ELL + COO overflow tail).  The non-edge backends
     need the stacked pack from ``stack_partitions(..., backend=...)``; the
     exchange plan, caches and byte accounting are backend-invariant.
+
+    ``halo_dtype="bf16"`` casts every tier's payload before the exchange
+    and dequantises on scatter, halving the accounted wire bytes
+    (``halo_dtype_bytes`` is threaded into ``train_capgnn``'s accounting).
+
+    ``donate=True`` (default) donates ``(params, opt_state, caches)`` into
+    the jitted steps, so the optimizer and cache buffers are updated
+    in place in steady state instead of being copied.  Callers must then
+    treat the arguments of a step call as consumed — re-use the *returned*
+    state (pass ``donate=False`` for branch-and-compare experiments that
+    deliberately re-run a step from the same state).
     """
     p, ni, nh = sp.num_parts, sp.n_inner_max, sp.n_halo_max
+    hdt, hd_bytes = halo_dtype_info(halo_dtype)
     layers = cfg.num_layers
 
     feats = jnp.asarray(sp.feats)
@@ -246,10 +291,10 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             else:
                 d = h.shape[-1]
                 halo = jnp.zeros((p, nh, d), h.dtype)
-                halo = _scatter(halo, un_d["recv_halo_pos"], _pull(un_d, h),
-                                un_d["recv_valid"])
-                loc_fresh = _pull(loc_d, h)
-                buf_fresh = _build_global(glob_d, h)
+                halo = _scatter(halo, un_d["recv_halo_pos"],
+                                _pull(un_d, h, hdt), un_d["recv_valid"])
+                loc_fresh = _pull(loc_d, h, hdt)
+                buf_fresh = _build_global(glob_d, h, hdt)
                 loc_use = caches["local"][li - 1] if use_stale else loc_fresh
                 buf_use = caches["global"][li - 1] if use_stale else buf_fresh
                 halo = _scatter(halo, loc_d["recv_halo_pos"], loc_use,
@@ -282,7 +327,8 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                                     else jnp.zeros(()))
             out_caches = fresh if emit_fresh else caches
             return new_params, new_state, out_caches, metrics
-        return jax.jit(step)
+        # steady-state steps rewrite (params, opt_state, caches) in place
+        return jax.jit(step, donate_argnums=(0, 1, 2) if donate else ())
 
     caches0 = init_caches(cfg, xplan, p)
 
@@ -311,7 +357,8 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                       step_cached=make_step(True, False),
                       step_pipelined=make_step(True, True),
                       evaluate=evaluate,
-                      caches0=caches0, backend=backend)
+                      caches0=caches0, backend=backend,
+                      halo_dtype_bytes=hd_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -358,6 +405,10 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     opt_state = opt_state0 if opt_state0 is not None else opt.init(params)
     caches = init_caches(cfg, xplan, num_parts)
     dims = getattr(runtime, "comm_dims", list(cfg.feat_dims[:cfg.num_layers]))
+    # actual wire width of one halo payload entry (2 under halo_dtype=bf16);
+    # the vanilla baseline ships the same payload dtype, so the reduction
+    # isolates the caching effect.
+    dtype_bytes = getattr(runtime, "halo_dtype_bytes", 4)
 
     losses: list[float] = []
     val_acc: list[float] = []
@@ -375,8 +426,10 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
             step_fn = runtime.step_cached
         params, opt_state, caches, m = step_fn(params, opt_state, caches)
         losses.append(float(m["loss"]))
-        comm += sum(xplan.bytes_per_step(d, refresh=refresh) for d in dims)
-        vanilla += sum(xplan.total_halo * d * 4 for d in dims)
+        comm += sum(xplan.bytes_per_step(d, refresh=refresh,
+                                         dtype_bytes=dtype_bytes)
+                    for d in dims)
+        vanilla += sum(xplan.total_halo * d * dtype_bytes for d in dims)
         refresh_steps += int(refresh)
         drift = float(m["drift"]) if "drift" in m else None
         controller.observe(drift)

@@ -4,16 +4,38 @@
 Layout: every ``[P, ...]`` stacked array is sharded on its leading axis over
 the mesh axis (or axis *tuple* — the §5.11-style multi-pod mesh shards the
 partition dim over ``("pod", "data")``, linearised row-major, which is
-exactly the order ``all_gather`` over that tuple reconstructs).  Parameters,
-optimizer state and the deduplicated global-cache buffer are replicated.
+exactly the order ``all_gather`` / the ``ppermute`` ring index over that
+tuple reconstructs).  Parameters, optimizer state and the deduplicated
+global-cache buffer are replicated.
 
-Communication: each tier's owners pack their (deduplicated) send rows into a
-dense payload and a single static-shape ``all_gather`` delivers every
-payload to every consumer; consumers then address rows by
-``(src_part, src_slot)``.  On cached steps only the uncached tier's payload
-moves — the JACA tiers replace that collective entirely.  Loss and gradient
-reductions are ``psum`` over the same axis tuple, so backprop through the
-exchange (the ``all_gather`` transpose) reproduces the oracle's exact
+Communication — two transports, selected by ``transport=``:
+
+- ``"allgather"``: each tier's owners pack their (deduplicated) send rows
+  into a dense payload and a single static-shape ``all_gather`` delivers
+  every payload to every consumer; consumers address rows by
+  ``(src_part, src_slot)``.  Simple, but wire volume is ~P x the paper's
+  point-to-point accounting (replicas land on devices that never read
+  them).
+- ``"p2p"``: each owner re-packs its rows per destination
+  (``peer_send_row``) and P-1 ``ppermute`` rotations ship block (i -> j)
+  directly to j — static shapes, works on flat and multi-pod meshes, and
+  each tier row crosses the wire exactly once per consumer, matching
+  :meth:`~repro.dist.ExchangePlan.bytes_per_step` /
+  :func:`repro.core.jaca.comm_bytes_per_step` exactly.  The global tier
+  is a ring *broadcast* of the deduplicated buffer (it emulates the
+  paper's CPU-shared cache: each unique row originates once).
+
+On cached steps only the uncached tier moves — the JACA tiers replace that
+traffic entirely.  ``step_pipelined`` consumes stale caches like
+``step_cached`` but *additionally* refreshes them with a double-buffered
+ring: the per-boundary refresh pulls are issued on the previous layer's
+activations and advanced one rotation per layer while the SpMM computes,
+finalising only after the last layer — nothing on the loss/grad critical
+path waits for them (and no backward collectives are emitted for the
+refreshed tiers), which is where the paper's pipeline hides the refresh
+latency.  Loss and gradient reductions are ``psum`` over the same axis
+tuple, so backprop through the exchange (``all_gather`` transpose /
+inverse-permutation ``ppermute``) reproduces the oracle's exact
 cross-partition gradient flow.
 
 Version note: ``shard_map`` is imported from ``jax.experimental.shard_map``
@@ -34,13 +56,80 @@ if hasattr(jax, "shard_map"):            # jax >= 0.5 exports it at top level
 else:
     from jax.experimental.shard_map import shard_map
 
+from repro.kernels.ops import pack_rows
 from repro.models.gnn import GNNConfig, _layer_apply, accuracy, cross_entropy_loss
 from repro.optim import Optimizer
 
-from .capgnn_sim import init_caches, make_adj_builder
+from .capgnn_sim import halo_dtype_info, init_caches, make_adj_builder
 from .exchange import ExchangePlan, StackedParts
 
-__all__ = ["make_spmd_runtime", "SpmdRuntime"]
+__all__ = ["make_spmd_runtime", "SpmdRuntime", "TRANSPORTS"]
+
+TRANSPORTS = ("allgather", "p2p")
+
+
+def _shift_perm(p: int, r: int) -> list:
+    """Static permutation delivering device i's payload to (i + r) % p."""
+    return [(s, (s + r) % p) for s in range(p)]
+
+
+class _PeerRing:
+    """P-1 ``ppermute`` rotations over a per-peer packed payload.
+
+    ``payload[j]`` is the block this device ships to peer ``j``; after
+    ``finish()``, ``blocks[o]`` holds the block peer ``o`` shipped to this
+    device (own slot stays zero — a device never consumes its own halo
+    rows).  Rotation ``r`` delivers block (i -> (i + r) % p) in one hop, so
+    each row crosses the wire once per consumer.  The ring is advance-able
+    one rotation at a time so the pipelined step can interleave rotations
+    with layer compute in program order.
+    """
+
+    def __init__(self, payload: jnp.ndarray, i_dev, p: int, names):
+        self.payload = payload                      # [P, B, d]
+        self.i, self.p, self.names = i_dev, p, names
+        self.blocks = jnp.zeros_like(payload)       # [P, B, d] by owner
+        self.r = 0
+
+    def advance(self, rotations: int = 1) -> "_PeerRing":
+        for _ in range(rotations):
+            if self.r >= self.p - 1:
+                break
+            self.r += 1
+            send = jnp.take(self.payload, (self.i + self.r) % self.p, axis=0)
+            recv = jax.lax.ppermute(send, self.names,
+                                    _shift_perm(self.p, self.r))
+            self.blocks = self.blocks.at[(self.i - self.r) % self.p].set(recv)
+        return self
+
+    def finish(self) -> jnp.ndarray:
+        return self.advance(self.p).blocks
+
+
+class _BufRing:
+    """Ring broadcast of the deduplicated global-tier payload ``[SG, d]``:
+    each owner's buffer originates once and circulates to all peers,
+    accumulating the same ``[P, SG, d]`` an ``all_gather`` would build."""
+
+    def __init__(self, payload: jnp.ndarray, i_dev, p: int, names):
+        self.payload = payload
+        self.i, self.p, self.names = i_dev, p, names
+        acc = jnp.zeros((p,) + payload.shape, payload.dtype)
+        self.acc = acc.at[i_dev].set(payload)
+        self.r = 0
+
+    def advance(self, rotations: int = 1) -> "_BufRing":
+        for _ in range(rotations):
+            if self.r >= self.p - 1:
+                break
+            self.r += 1
+            recv = jax.lax.ppermute(self.payload, self.names,
+                                    _shift_perm(self.p, self.r))
+            self.acc = self.acc.at[(self.i - self.r) % self.p].set(recv)
+        return self
+
+    def finish(self) -> jnp.ndarray:
+        return self.advance(self.p).acc
 
 
 @dataclasses.dataclass
@@ -57,16 +146,39 @@ class SpmdRuntime:
     evaluate: Callable
     caches0: dict
     backend: str = "edges"
+    transport: str = "allgather"
+    halo_dtype_bytes: int = 4
+
+    def wire_rows(self, refresh: bool, padded: bool = False) -> dict:
+        """Rows this runtime's transport moves in one layer exchange (see
+        :meth:`repro.dist.ExchangePlan.transport_rows`)."""
+        return self.xplan.transport_rows(self.transport, refresh,
+                                         padded=padded)
 
 
 def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                       opt: Optimizer, mesh, axis: str | Sequence[str] = "data",
                       exchange_layer0: bool = True, backend: str = "edges",
-                      interpret: bool = True) -> SpmdRuntime:
+                      interpret: bool = True, transport: str = "allgather",
+                      halo_dtype=None, donate: bool = True,
+                      pallas_pack: bool = False) -> SpmdRuntime:
     """``backend`` mirrors :func:`make_sim_runtime`: the per-device local
     aggregation runs through the edge-list segment-sum, the Pallas
     blocked-ELL kernel, or the hybrid ELL+COO pack — the exchange
-    collectives and byte accounting are identical across backends."""
+    collectives and byte accounting are identical across backends.
+
+    ``transport`` picks the halo exchange lowering (see module docstring);
+    ``"p2p"`` vs ``"allgather"`` logits and gradients agree to ~1e-5
+    (asserted by ``tests/test_transport.py``).  ``halo_dtype="bf16"``
+    casts every payload before the wire and dequantises on scatter.
+    ``donate=True`` donates ``(params, opt_state, caches)`` into the
+    jitted steps — re-use the returned state, not the arguments.
+    ``pallas_pack=True`` routes the per-peer payload pack through the
+    Pallas :func:`~repro.kernels.ops.gather_rows` kernel (TPU path).
+    """
+    if transport not in TRANSPORTS:
+        raise ValueError(f"unknown transport {transport!r}; "
+                         f"expected one of {TRANSPORTS}")
     names = (axis,) if isinstance(axis, str) else tuple(axis)
     mesh_size = int(np.prod([mesh.shape[n] for n in names]))
     p, ni, nh = sp.num_parts, sp.n_inner_max, sp.n_halo_max
@@ -76,6 +188,20 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
     layers = cfg.num_layers
     total_train = float(np.maximum(sp.train_mask.sum(), 1.0))
     adj_leaves, build_adj = make_adj_builder(sp, backend, interpret)
+    hdt, hd_bytes = halo_dtype_info(halo_dtype)
+    p2p = transport == "p2p"
+
+    def tier_arrays(t):
+        d = {"send_row": t.send_row,
+             "recv_src_part": t.recv_src_part,
+             "recv_src_slot": t.recv_src_slot,
+             "recv_halo_pos": t.recv_halo_pos,
+             "recv_valid": t.recv_valid}
+        if p2p:
+            d.update(peer_send_row=t.peer_send_row,
+                     peer_send_valid=t.peer_send_valid,
+                     recv_peer_slot=t.recv_peer_slot)
+        return d
 
     # Sharded batch: leading dim = partition. Tier recv/read/send sides are
     # per-partition too, so they shard the same way.
@@ -85,16 +211,8 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         "train_mask": sp.train_mask, "val_mask": sp.val_mask,
         "test_mask": sp.test_mask,
         "adj": adj_leaves,
-        "un": {"send_row": xplan.uncached.send_row,
-               "recv_src_part": xplan.uncached.recv_src_part,
-               "recv_src_slot": xplan.uncached.recv_src_slot,
-               "recv_halo_pos": xplan.uncached.recv_halo_pos,
-               "recv_valid": xplan.uncached.recv_valid},
-        "loc": {"send_row": xplan.local.send_row,
-                "recv_src_part": xplan.local.recv_src_part,
-                "recv_src_slot": xplan.local.recv_src_slot,
-                "recv_halo_pos": xplan.local.recv_halo_pos,
-                "recv_valid": xplan.local.recv_valid},
+        "un": tier_arrays(xplan.uncached),
+        "loc": tier_arrays(xplan.local),
         "gl": {"send_row": xplan.glob.send_row,
                "read_pos": xplan.glob.read_pos,
                "read_buf_idx": xplan.glob.read_buf_idx,
@@ -107,35 +225,69 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
 
     caches_spec = {"local": P(names), "global": P()}
 
-    def _device_forward(params, caches, dsh, drep, use_stale: bool):
-        """Per-device forward. ``dsh`` leaves carry a leading dim of 1."""
+    def _quant(x):
+        return x.astype(hdt) if hdt is not None else x
+
+    def _device_forward(params, caches, dsh, drep, use_stale: bool,
+                        defer_refresh: bool = False):
+        """Per-device forward. ``dsh`` leaves carry a leading dim of 1.
+
+        ``defer_refresh`` (pipelined step, p2p transport): the local/global
+        refresh pulls are issued as advance-able rings at their layer
+        boundary, rotated once per layer while the SpMM computes, and
+        finalised after the last layer — the layer math itself consumes
+        the stale caches, so the rings never block it.
+        """
         feats = dsh["feats"][0]                       # [NI, F]
         halo0 = dsh["halo_feats"][0]                  # [NH, F]
         adj = build_adj({k: v[0] for k, v in dsh["adj"].items()})
+        i_dev = jax.lax.axis_index(names) if p2p else None
 
-        def pull(tier):
-            def run(h):
-                payload = h[tier["send_row"][0]]                  # [S, d]
-                gathered = jax.lax.all_gather(payload, names)     # [P, S, d]
-                rows = gathered[tier["recv_src_part"][0],
-                                tier["recv_src_slot"][0]]         # [R, d]
-                return jnp.where(tier["recv_valid"][0][..., None], rows, 0.0)
-            return run
+        def peer_ring(tier, h):
+            payload = pack_rows(h, tier["peer_send_row"][0],
+                                use_pallas=pallas_pack,
+                                interpret=interpret)             # [P, B, d]
+            payload = jnp.where(tier["peer_send_valid"][0][..., None],
+                                payload, 0.0)
+            return _PeerRing(_quant(payload), i_dev, p, names)
+
+        def peer_collect(tier, blocks, dtype):
+            rows = blocks[tier["recv_src_part"][0],
+                          tier["recv_peer_slot"][0]].astype(dtype)
+            return jnp.where(tier["recv_valid"][0][..., None], rows, 0.0)
+
+        def pull(tier, h):
+            """Fresh tier rows [R, d], transport run to completion."""
+            if p2p:
+                return peer_collect(tier, peer_ring(tier, h).finish(),
+                                    h.dtype)
+            payload = _quant(h[tier["send_row"][0]])              # [S, d]
+            gathered = jax.lax.all_gather(payload, names)         # [P, S, d]
+            rows = gathered[tier["recv_src_part"][0],
+                            tier["recv_src_slot"][0]].astype(h.dtype)
+            return jnp.where(tier["recv_valid"][0][..., None], rows, 0.0)
+
+        def buf_ring(h):
+            return _BufRing(_quant(h[dsh["gl"]["send_row"][0]]), i_dev, p,
+                            names)
+
+        def buf_collect(acc, dtype):
+            return acc[drep["g_src_part"], drep["g_src_slot"]].astype(dtype)
+
+        def build_global(h):
+            if p2p:
+                return buf_collect(buf_ring(h).finish(), h.dtype)
+            payload = _quant(h[dsh["gl"]["send_row"][0]])         # [SG, d]
+            gathered = jax.lax.all_gather(payload, names)         # [P, SG, d]
+            return buf_collect(gathered, h.dtype)
 
         def scatter(halo, pos, rows, valid):
             pos_eff = jnp.where(valid, pos, nh)
             return halo.at[pos_eff].set(rows, mode="drop")
 
-        def build_global(h):
-            payload = h[dsh["gl"]["send_row"][0]]                 # [SG, d]
-            gathered = jax.lax.all_gather(payload, names)         # [P, SG, d]
-            return gathered[drep["g_src_part"], drep["g_src_slot"]]
-
-        pull_un = pull(dsh["un"])
-        pull_loc = pull(dsh["loc"])
-
         h = feats
         fresh = {"local": [], "global": []}
+        pending = []   # (dtype, local _PeerRing, global _BufRing)
         for li, lp in enumerate(params):
             if li == 0:
                 halo = halo0
@@ -143,39 +295,68 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                 d = h.shape[-1]
                 halo = jnp.zeros((nh, d), h.dtype)
                 halo = scatter(halo, dsh["un"]["recv_halo_pos"][0],
-                               pull_un(h), dsh["un"]["recv_valid"][0])
-                loc_fresh = pull_loc(h)
-                buf_fresh = build_global(h)
-                loc_use = (caches["local"][li - 1][0] if use_stale
-                           else loc_fresh)
-                buf_use = caches["global"][li - 1] if use_stale else buf_fresh
+                               pull(dsh["un"], h),
+                               dsh["un"]["recv_valid"][0])
+                if defer_refresh and p2p:
+                    # issue this boundary's refresh rings; consume stale
+                    pending.append((h.dtype, peer_ring(dsh["loc"], h),
+                                    buf_ring(h)))
+                    loc_use = caches["local"][li - 1][0]
+                    buf_use = caches["global"][li - 1]
+                else:
+                    loc_fresh = pull(dsh["loc"], h)
+                    buf_fresh = build_global(h)
+                    loc_use = (caches["local"][li - 1][0] if use_stale
+                               else loc_fresh)
+                    buf_use = (caches["global"][li - 1] if use_stale
+                               else buf_fresh)
+                    fresh["local"].append(loc_fresh[None])
+                    fresh["global"].append(buf_fresh)
                 halo = scatter(halo, dsh["loc"]["recv_halo_pos"][0], loc_use,
                                dsh["loc"]["recv_valid"][0])
                 gl = dsh["gl"]
                 halo = scatter(halo, gl["read_pos"][0],
                                buf_use[gl["read_buf_idx"][0]],
                                gl["read_valid"][0])
-                fresh["local"].append(loc_fresh[None])
-                fresh["global"].append(buf_fresh)
             h_local = jnp.concatenate([h, halo], axis=0)
             h = _layer_apply(cfg, lp, adj, h_local, ni,
                              is_last=(li == layers - 1))
+            # one ring rotation per in-flight refresh, placed right after
+            # the layer's SpMM in program order so XLA's latency-hiding
+            # scheduler can run the sends under the compute
+            for _, lring, bring in pending:
+                lring.advance()
+                bring.advance()
+        for dtype, lring, bring in pending:
+            fresh["local"].append(
+                peer_collect(dsh["loc"], lring.finish(), dtype)[None])
+            fresh["global"].append(buf_collect(bring.finish(), dtype))
         return h, fresh
 
-    def _device_loss(params, caches, dsh, drep, use_stale: bool):
-        logits, fresh = _device_forward(params, caches, dsh, drep, use_stale)
+    def _device_loss(params, caches, dsh, drep, use_stale: bool,
+                     defer_refresh: bool):
+        """This device's share of the global mean loss.  The cross-device
+        ``psum`` stays OUTSIDE the differentiated function: under
+        ``shard_map`` the transpose of an in-loss ``psum`` is another
+        ``psum``, so differentiating the summed loss and then psumming the
+        grads double-counts by a factor P (the oracle-parity suite pins
+        this with an sgd step, where adam's scale-invariant first step
+        cannot mask it)."""
+        logits, fresh = _device_forward(params, caches, dsh, drep, use_stale,
+                                        defer_refresh)
         labels = dsh["labels"][0]
         mask = dsh["train_mask"][0]
         logp = jax.nn.log_softmax(logits, -1)
         nll = -jnp.take_along_axis(logp, labels[:, None], -1)[:, 0]
-        loss = jax.lax.psum(jnp.sum(nll * mask), names) / total_train
-        return loss, (logits, fresh)
+        return jnp.sum(nll * mask) / total_train, (logits, fresh)
 
-    def _make_step(use_stale: bool, emit_fresh: bool):
+    def _make_step(use_stale: bool, emit_fresh: bool,
+                   defer_refresh: bool = False):
         def device_step(params, opt_state, caches, dsh, drep):
             (loss, (logits, fresh)), grads = jax.value_and_grad(
                 _device_loss, has_aux=True)(params, caches, dsh, drep,
-                                            use_stale)
+                                            use_stale, defer_refresh)
+            loss = jax.lax.psum(loss, names)
             grads = jax.lax.psum(grads, names)
             new_params, new_state = opt.update(grads, opt_state, params)
             labels = dsh["labels"][0]
@@ -200,10 +381,10 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             out_specs=(P(), P(), caches_spec, P()),
             check_rep=False)
 
-        @jax.jit
         def step(params, opt_state, caches):
             return sm(params, opt_state, caches, data_sh, data_rep)
-        return step
+        # steady-state steps rewrite (params, opt_state, caches) in place
+        return jax.jit(step, donate_argnums=(0, 1, 2) if donate else ())
 
     def _device_fwd_fresh(params, caches, dsh, drep):
         logits, _ = _device_forward(params, caches, dsh, drep, False)
@@ -237,5 +418,7 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                        comm_dims=comm_dims, forward_fresh=forward_fresh,
                        step_refresh=_make_step(False, True),
                        step_cached=_make_step(True, False),
-                       step_pipelined=_make_step(True, True),
-                       evaluate=evaluate, caches0=caches0, backend=backend)
+                       step_pipelined=_make_step(True, True,
+                                                 defer_refresh=True),
+                       evaluate=evaluate, caches0=caches0, backend=backend,
+                       transport=transport, halo_dtype_bytes=hd_bytes)

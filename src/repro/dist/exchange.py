@@ -17,11 +17,25 @@ over the partition axis) and the collectives runtime (`capgnn_spmd`, a
   instead of k times.  This dedup is where the global tier's savings come
   from (paper §4.2).
 
-Transport model: per tier, every owner packs the rows any consumer needs
-into a dense send buffer (``send_row``); consumers address rows by
-``(src_part, src_slot)`` into the gathered payload and scatter them to
-their halo positions.  In the SPMD runtime the payload gather is a single
-``all_gather`` — static shapes, no point-to-point plumbing.
+Transport layouts: every tier carries **two** send layouts compiled from
+the same index sets —
+
+- a *broadcast* layout (``send_row``): each owner packs the rows any
+  consumer needs into one deduplicated dense buffer; consumers address
+  rows by ``(src_part, src_slot)``.  The SPMD runtime's
+  ``transport="allgather"`` ships this buffer to every device with a
+  single ``all_gather`` (wire volume ~P x the paper's point-to-point
+  model — replicas land on devices that never read them);
+- a *per-peer packed* layout (``peer_send_row``): for each (owner, peer)
+  pair, exactly the rows that peer consumes, padded to the fleet-wide
+  maximum peer block.  ``transport="p2p"`` ships block (i -> j) directly
+  with ``ppermute`` rotations, so each row crosses the wire once per
+  consumer — exactly the row counts :meth:`ExchangePlan.bytes_per_step`
+  and :func:`repro.core.jaca.comm_bytes_per_step` account for.
+
+The global tier stays a deduplicated broadcast in both transports (it
+emulates the paper's CPU-shared cache: each unique row is *originated*
+once by its owner and circulated on the ring).
 """
 from __future__ import annotations
 
@@ -43,15 +57,22 @@ class ExchangeTier:
 
     All arrays are padded to the per-partition maximum; ``*_valid`` masks
     mark real entries.  ``send_row`` holds *deduplicated* inner rows per
-    owner (a row consumed by several partitions occupies one send slot).
+    owner (a row consumed by several partitions occupies one send slot) —
+    the broadcast/all-gather layout.  ``peer_send_row`` holds the same
+    rows re-packed per destination (a row consumed by k peers occupies
+    one slot in each of the k peer blocks) — the point-to-point layout;
+    consumers address block rows by ``(src_part, peer_slot)``.
     """
     name: str
-    send_row: np.ndarray       # [P, S] inner row each owner contributes
-    send_valid: np.ndarray     # [P, S] bool
-    recv_src_part: np.ndarray  # [P, R] owning partition per received row
-    recv_src_slot: np.ndarray  # [P, R] slot in the owner's send buffer
-    recv_halo_pos: np.ndarray  # [P, R] halo position to scatter into
-    recv_valid: np.ndarray     # [P, R] bool
+    send_row: np.ndarray        # [P, S] inner row each owner contributes
+    send_valid: np.ndarray      # [P, S] bool
+    recv_src_part: np.ndarray   # [P, R] owning partition per received row
+    recv_src_slot: np.ndarray   # [P, R] slot in the owner's send buffer
+    recv_halo_pos: np.ndarray   # [P, R] halo position to scatter into
+    recv_valid: np.ndarray      # [P, R] bool
+    peer_send_row: np.ndarray   # [P, P, B] inner rows owner i ships to peer j
+    peer_send_valid: np.ndarray  # [P, P, B] bool
+    recv_peer_slot: np.ndarray  # [P, R] slot in the (owner -> me) peer block
 
     @property
     def n_rows(self) -> int:
@@ -62,6 +83,18 @@ class ExchangeTier:
     def n_send_rows(self) -> int:
         """Total un-padded send rows (deduplicated per owner)."""
         return int(self.send_valid.sum())
+
+    @property
+    def n_peer_rows(self) -> int:
+        """Total un-padded rows across all per-peer blocks.  Equals
+        ``n_rows`` — each (vertex, consumer) pair occupies exactly one
+        slot of exactly one peer block (asserted by the tier-1 suite)."""
+        return int(self.peer_send_valid.sum())
+
+    @property
+    def peer_block(self) -> int:
+        """Padded width of one (owner, peer) block."""
+        return int(self.peer_send_row.shape[2])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,17 +131,61 @@ class ExchangePlan:
         consumer) for the uncached/local tiers, one row per unique vertex
         for the global tier.  The plan's index sets count these rows
         exactly; matches :func:`repro.core.jaca.comm_bytes_per_step`
-        (asserted by the tier-1 suite).  Note the `capgnn_spmd` runtime
-        *emulates* this transport with ``all_gather`` collectives, whose
-        wire volume is the send-buffer rows replicated to all P devices —
-        use these figures for the paper's accounting, not for hardware
-        interconnect counters.
+        (asserted by the tier-1 suite).  The ``capgnn_spmd`` runtime's
+        ``transport="p2p"`` ships exactly these rows (per-peer packed
+        ``ppermute`` blocks — each tier row originates once per consumer,
+        each global row once total), so these figures ARE its wire
+        accounting; ``transport="allgather"`` replicates every send
+        buffer to all P devices and moves ~P x more.  ``dtype_bytes``
+        must be the actual halo payload width (4 for f32, 2 for the
+        ``halo_dtype="bf16"`` compressed transport).
         """
         row = feat_dim * dtype_bytes
         n = self.uncached.n_rows
         if refresh:
             n += self.local.n_rows + self.glob.n_unique
         return n * row
+
+    def transport_rows(self, transport: str, refresh: bool,
+                       padded: bool = False) -> dict:
+        """Rows crossing the wire in one layer exchange under a transport.
+
+        ``padded=False`` counts real (valid) rows *originated* into the
+        transport — for ``"p2p"`` this equals the paper accounting of
+        :meth:`bytes_per_step` exactly; for ``"allgather"`` every owner's
+        send buffer lands on all P devices, hence the ~P x blow-up.
+        ``padded=True`` additionally counts the static-shape padding the
+        collectives actually carry (what HLO wire counters see).
+        """
+        if transport not in ("p2p", "allgather"):
+            raise ValueError(f"unknown transport {transport!r}; "
+                             "expected 'p2p' or 'allgather'")
+        p = self.num_parts
+
+        def tier_rows(t: ExchangeTier) -> int:
+            if transport == "p2p":
+                # one ppermute per (owner, peer != owner) block
+                return (p * (p - 1) * t.peer_block if padded
+                        else t.n_peer_rows)
+            # all_gather: every owner's padded buffer to all P devices
+            width = t.send_row.shape[1]
+            return p * p * width if padded else p * t.n_send_rows
+
+        def glob_rows() -> int:
+            if transport == "p2p":
+                # ring broadcast: each unique row originates once, then
+                # circulates; padding rides every one of the P-1 rotations
+                width = self.glob.send_row.shape[1]
+                return p * (p - 1) * width if padded else self.glob.n_unique
+            width = self.glob.send_row.shape[1]
+            return (p * p * width if padded
+                    else p * int(self.glob.send_valid.sum()))
+
+        out = {"uncached": tier_rows(self.uncached)}
+        out["local"] = tier_rows(self.local) if refresh else 0
+        out["global"] = glob_rows() if refresh else 0
+        out["total"] = out["uncached"] + out["local"] + out["global"]
+        return out
 
 
 def _pad2(rows: list[np.ndarray], fill: int, dtype=np.int32
@@ -147,6 +224,47 @@ def _owner_slots(op_all: np.ndarray, orow_all: np.ndarray, num_parts: int
     return send_rows, slot_of_uniq[inverse]
 
 
+def _peer_blocks(gids_per_part: list[np.ndarray], owner_part: np.ndarray,
+                 owner_row: np.ndarray, num_parts: int
+                 ) -> tuple[np.ndarray, np.ndarray, list[np.ndarray]]:
+    """Per-destination packed send blocks, vectorized.
+
+    For each (owner i, consumer j) pair, the inner rows i must ship to j
+    (sorted by row), padded to the fleet-wide max block; plus, per
+    consumer, the slot of each of its tier gids inside its (owner -> me)
+    block.  A gid consumed by k partitions occupies one slot in each of
+    its k destination blocks — no cross-peer dedup, that is the
+    point-to-point transport's one-row-per-(vertex, consumer) contract.
+    """
+    p = num_parts
+    counts = [g.size for g in gids_per_part]
+    total = sum(counts)
+    if total == 0:
+        return (np.zeros((p, p, 0), np.int32), np.zeros((p, p, 0), bool),
+                [np.zeros(0, np.int64) for _ in range(p)])
+    gids_all = np.concatenate(gids_per_part)
+    cons_all = np.repeat(np.arange(p), counts)
+    op_all = owner_part[gids_all]
+    orow_all = owner_row[gids_all]
+    base = int(orow_all.max()) + 1
+    pair = op_all * p + cons_all                     # block id in [0, p*p)
+    order = np.argsort(pair * base + orow_all, kind="stable")
+    pair_s = pair[order]
+    first = np.searchsorted(pair_s, np.arange(p * p))
+    slot_s = np.arange(total) - first[pair_s]        # slot within block
+    slot = np.empty(total, np.int64)
+    slot[order] = slot_s
+    width = int(np.bincount(pair, minlength=p * p).max())
+    peer_row = np.zeros((p * p, width), np.int32)
+    peer_valid = np.zeros((p * p, width), dtype=bool)
+    peer_row[pair_s, slot_s] = orow_all[order]
+    peer_valid[pair_s, slot_s] = True
+    offsets = np.cumsum([0] + counts)
+    slots_per_part = [slot[offsets[i]: offsets[i + 1]] for i in range(p)]
+    return (peer_row.reshape(p, p, width), peer_valid.reshape(p, p, width),
+            slots_per_part)
+
+
 def build_exchange_plan(ps: PartitionSet, plan: CachePlan) -> ExchangePlan:
     """Compile ``plan``'s tiering into static gather/scatter index sets."""
     p = ps.num_parts
@@ -173,12 +291,19 @@ def build_exchange_plan(ps: PartitionSet, plan: CachePlan) -> ExchangePlan:
         recv_src_slot, _ = _pad2(src_slots, fill=0)
         recv_halo_pos, _ = _pad2([np.asarray(q, np.int32)
                                   for q in pos_per_part], fill=0)
+        peer_row, peer_valid, peer_slots = _peer_blocks(
+            gids_per_part, owner_part, owner_row, p)
+        recv_peer_slot, _ = _pad2([s.astype(np.int32)
+                                   for s in peer_slots], fill=0)
         return ExchangeTier(name=name, send_row=send_row,
                             send_valid=send_valid,
                             recv_src_part=recv_src_part,
                             recv_src_slot=recv_src_slot,
                             recv_halo_pos=recv_halo_pos,
-                            recv_valid=recv_valid)
+                            recv_valid=recv_valid,
+                            peer_send_row=peer_row,
+                            peer_send_valid=peer_valid,
+                            recv_peer_slot=recv_peer_slot)
 
     uncached = build_tier("uncached",
                           [w.uncached_gids for w in plan.workers],

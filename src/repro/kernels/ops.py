@@ -12,7 +12,7 @@ from .cache_gather import gather_rows_pallas
 from . import ref as _ref
 
 __all__ = ["ell_pack", "ell_pack_hybrid", "hybrid_spmm", "ell_stats",
-           "ell_spmm", "gather_rows", "cache_combine"]
+           "ell_spmm", "gather_rows", "pack_rows", "cache_combine"]
 
 
 def ell_pack(src: np.ndarray, dst: np.ndarray, w: np.ndarray, n_rows: int,
@@ -123,6 +123,27 @@ def gather_rows(src: jnp.ndarray, idx: jnp.ndarray, *,
     out = gather_rows_pallas(src_p, idx_p, block_rows=block_rows,
                              block_feat=block_feat, interpret=interpret)
     return out[:n_out, :d]
+
+
+def pack_rows(src: jnp.ndarray, idx: jnp.ndarray, *,
+              use_pallas: bool = False, interpret: bool = True
+              ) -> jnp.ndarray:
+    """Fused peer-pack gather: pull ``src`` rows for an arbitrarily-shaped
+    index block in one pass, e.g. the ``[P, B]`` per-peer send layout of
+    the p2p halo transport -> ``[P, B, d]`` payload.
+
+    ``use_pallas=True`` routes the flattened gather through the Pallas
+    :func:`gather_rows` kernel (one VMEM sweep over ``src`` per block tile
+    — the TPU path); the default is a plain ``take``, which XLA fuses into
+    the surrounding send-buffer pack and is faster under CPU interpret
+    mode.  Both produce identical rows.
+    """
+    flat = idx.reshape(-1)
+    if use_pallas:
+        out = gather_rows(src, flat, interpret=interpret)
+    else:
+        out = jnp.take(src, flat, axis=0)
+    return out.reshape(*idx.shape, src.shape[1])
 
 
 def cache_combine(local_rows, local_pos, global_rows, global_pos,

@@ -58,9 +58,11 @@ def run_gnn(args) -> dict:
     xplan = build_exchange_plan(ps, plan)
     sp = stack_partitions(ps, task, backend=args.backend)
     opt = adam(args.lr)
+    halo_dtype = getattr(args, "halo_dtype", "f32")
     runtime = make_sim_runtime(cfg, sp, xplan, opt,
                                exchange_layer0=not args.jaca,
-                               backend=args.backend)
+                               backend=args.backend,
+                               halo_dtype=halo_dtype)
     ctl = StalenessController(refresh_every=args.refresh_every,
                              adaptive=args.adaptive_staleness)
 
@@ -87,6 +89,7 @@ def run_gnn(args) -> dict:
         "dataset": args.dataset, "model": args.model, "parts": p,
         "epochs": args.epochs, "resumed_from": start_epoch,
         "final_loss": report.losses[-1] if report.losses else None,
+        "halo_dtype": halo_dtype,
         "test_acc": test_acc, "comm_bytes": report.comm_bytes,
         "comm_reduction_vs_vanilla": report.comm_reduction,
         "refresh_steps": report.refresh_steps,
@@ -169,6 +172,9 @@ def main():
                    choices=["edges", "ell", "hybrid"],
                    help="local aggregation backend (ell/hybrid run the "
                         "Pallas SpMM; interpret mode on CPU)")
+    g.add_argument("--halo-dtype", default="f32", choices=["f32", "bf16"],
+                   help="halo payload dtype on the wire: bf16 halves every "
+                        "tier's exchange bytes (dequantised on scatter)")
     g.add_argument("--hidden", type=int, default=256)
     g.add_argument("--layers", type=int, default=3)
     g.add_argument("--parts", type=int, default=4)

@@ -52,7 +52,9 @@ def main():
     sp = stack_partitions(ps, task)
     opt = adam(1e-2)
 
-    sim = make_sim_runtime(cfg, sp, xplan, opt)
+    # donate=False: the parity check re-uses (params, caches) across the
+    # sim and SPMD runtimes' step calls
+    sim = make_sim_runtime(cfg, sp, xplan, opt, donate=False)
 
     if multi_pod:
         mesh = jax.make_mesh((2, 2), ("pod", "data"))
@@ -63,7 +65,7 @@ def main():
     sp_b = (sp if backend == "edges"
             else stack_partitions(ps, task, backend=backend))
     spmd = make_spmd_runtime(cfg, sp_b, xplan, opt, mesh, axis=axis,
-                             backend=backend)
+                             backend=backend, donate=False)
 
     params = init_gnn(jax.random.PRNGKey(7), cfg)
 

@@ -155,9 +155,11 @@ def test_sim_runtime_backend_parity(model, backend):
     opt = sgd(1e-2)
     params = init_gnn(jax.random.PRNGKey(3), cfg)
 
-    rt_e = make_sim_runtime(cfg, stack_partitions(ps, task), xplan, opt)
+    # donate=False: both runtimes step from the same params pytree
+    rt_e = make_sim_runtime(cfg, stack_partitions(ps, task), xplan, opt,
+                            donate=False)
     rt_b = make_sim_runtime(cfg, stack_partitions(ps, task, backend=backend),
-                            xplan, opt, backend=backend)
+                            xplan, opt, backend=backend, donate=False)
     le = np.asarray(rt_e.forward_fresh(params))
     lb = np.asarray(rt_b.forward_fresh(params))
     np.testing.assert_allclose(lb, le, rtol=1e-5, atol=1e-5)

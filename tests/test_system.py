@@ -107,7 +107,9 @@ def test_stale_steps_bounded_deviation():
     xplan = build_exchange_plan(ps, plan)
     sp = stack_partitions(ps, task)
     opt = sgd(1e-3)
-    rt = make_sim_runtime(cfg, sp, xplan, opt)
+    # donate=False: this test deliberately re-runs two step flavours from
+    # the same (params, opt_state, caches), which donation would consume
+    rt = make_sim_runtime(cfg, sp, xplan, opt, donate=False)
 
     params = init_gnn(jax.random.PRNGKey(1), cfg)
     opt_state = opt.init(params)
@@ -158,7 +160,8 @@ def test_pipelined_mode_matches_cached_numerics():
     xplan = build_exchange_plan(ps, plan)
     sp = stack_partitions(ps, task)
     opt = sgd(1e-2)
-    rt = make_sim_runtime(cfg, sp, xplan, opt)
+    # donate=False: cached and pipelined branch from the same state
+    rt = make_sim_runtime(cfg, sp, xplan, opt, donate=False)
     params = init_gnn(jax.random.PRNGKey(2), cfg)
     opt_state = opt.init(params)
     caches = init_caches(cfg, xplan, ps.num_parts)

@@ -1,0 +1,170 @@
+"""Subprocess helper for test_transport: runs the SPMD CaPGNN runtime on 8
+forced host devices with both halo transports and checks that
+
+- ``transport="p2p"`` (per-peer packed ppermute ring) and
+  ``transport="allgather"`` produce identical logits and gradients
+  (gradients pinned through an sgd(1.0) step, whose update *is* the
+  gradient — adam's scale-invariant first step cannot mask factor errors);
+- both match the single-device stacked oracle;
+- ``step_pipelined`` (double-buffered rings) matches ``step_cached``'s
+  loss exactly and emits the same fresh cache rows as the non-deferred
+  pipelined step;
+- the p2p transport's originated wire rows equal the exchange plan's tier
+  row counts exactly (no P x broadcast replication);
+- the donated jitted steps emit no donation warnings.
+
+Invoked as:  python tests/transport_parity_script.py
+                 [--backend edges|ell|hybrid] [--multi-pod] [--bf16]
+Exits non-zero on any mismatch.
+"""
+import os
+import sys
+import warnings
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+TOL = 1e-5
+
+
+def leafdiff(t1, t2):
+    import jax.numpy as jnp
+    diffs = [float(jnp.abs(a - b).max()) for a, b in
+             zip(jax.tree.leaves(t1), jax.tree.leaves(t2)) if a.size]
+    return max(diffs) if diffs else 0.0
+
+
+def main():
+    multi_pod = "--multi-pod" in sys.argv
+    bf16 = "--bf16" in sys.argv
+    backend = (sys.argv[sys.argv.index("--backend") + 1]
+               if "--backend" in sys.argv else "edges")
+    import jax.numpy as jnp
+    from repro.core import PROFILES, build_cache_plan, cal_capacity
+    from repro.data.gnn_data import FullBatchTask, split_masks
+    from repro.dist import (build_exchange_plan, init_caches,
+                            make_sim_runtime, stack_partitions)
+    from repro.dist.capgnn_spmd import make_spmd_runtime
+    from repro.graph import (build_partition, metis_partition, rmat,
+                             symmetric_normalize, synth_features)
+    from repro.models.gnn import GNNConfig, init_gnn
+    from repro.optim import sgd
+
+    parts = 4
+    g = rmat(360, 2200, seed=3)
+    feats, labels = synth_features(g, 12, 5, seed=3)
+    gn = symmetric_normalize(g)
+    tr, va, te = split_masks(g.num_nodes, seed=3)
+    task = FullBatchTask(graph=gn, features=feats, labels=labels,
+                         train_mask=tr, val_mask=va, test_mask=te,
+                         num_classes=5)
+    ps = build_partition(gn, metis_partition(gn, parts, seed=3), hops=1)
+    cfg = GNNConfig(model="gcn", in_dim=12, hidden_dim=16, out_dim=5,
+                    num_layers=3)
+    cap = cal_capacity(ps, cfg.feat_dims, [PROFILES["rtx3090"]] * parts)
+    plan = build_cache_plan(ps, cap, refresh_every=2)
+    xplan = build_exchange_plan(ps, plan)
+    sp = stack_partitions(ps, task, backend=backend)
+    opt = sgd(1.0)   # update == -grad: parity below IS gradient parity
+    halo_dtype = "bf16" if bf16 else None
+    # bf16 rounds both transports' payloads identically (forward logits
+    # stay <= 1e-5), but backward cotangents ALSO round through the wire
+    # cast, and the ring's transpose accumulates them in a different order
+    # than the all-gather's -> gradient comparisons carry the bf16 ulp
+    sim_tol = 5e-3 if bf16 else TOL
+    grad_tol = 1e-3 if bf16 else TOL
+
+    if multi_pod:
+        mesh = jax.make_mesh((2, 2), ("pod", "data"))
+        axis = ("pod", "data")
+    else:
+        mesh = jax.make_mesh((4,), ("data",))
+        axis = "data"
+
+    sim = make_sim_runtime(cfg, sp, xplan, opt, backend=backend,
+                           halo_dtype=halo_dtype, donate=False)
+    rts = {t: make_spmd_runtime(cfg, sp, xplan, opt, mesh, axis=axis,
+                                backend=backend, transport=t,
+                                halo_dtype=halo_dtype, donate=False)
+           for t in ("allgather", "p2p")}
+    params = init_gnn(jax.random.PRNGKey(7), cfg)
+
+    # ---- measured wire rows: p2p originates exactly the plan's row counts
+    assert xplan.uncached.n_peer_rows == xplan.uncached.n_rows
+    assert xplan.local.n_peer_rows == xplan.local.n_rows
+    rows = xplan.transport_rows("p2p", refresh=True)
+    assert rows["uncached"] == xplan.uncached.n_rows
+    assert rows["local"] == xplan.local.n_rows
+    assert rows["global"] == xplan.glob.n_unique
+    rows_ag = xplan.transport_rows("allgather", refresh=True)
+    assert rows_ag["total"] > rows["total"], (rows_ag, rows)
+
+    # ---- fresh-forward logits parity
+    lf = {t: np.asarray(rt.forward_fresh(params), np.float32)
+          for t, rt in rts.items()}
+    np.testing.assert_allclose(lf["p2p"], lf["allgather"],
+                               rtol=TOL, atol=TOL)
+    np.testing.assert_allclose(lf["p2p"], np.asarray(sim.forward_fresh(params)),
+                               rtol=sim_tol, atol=sim_tol)
+
+    # ---- gradient parity: refresh step (local/global ring transposes),
+    # then a cached step (uncached ring transpose + stale cache reads)
+    state = {}
+    for t, rt in rts.items():
+        p1, o1, c1, m1 = rt.step_refresh(params, opt.init(params),
+                                         init_caches(cfg, xplan, parts))
+        state[t] = (p1, o1, c1, float(m1["loss"]))
+    assert abs(state["p2p"][3] - state["allgather"][3]) < TOL
+    assert leafdiff(state["p2p"][0], state["allgather"][0]) < grad_tol
+    ps1, _, _, ms = sim.step_refresh(params, opt.init(params),
+                                     init_caches(cfg, xplan, parts))
+    assert abs(state["p2p"][3] - float(ms["loss"])) < sim_tol
+    assert leafdiff(state["p2p"][0], ps1) < sim_tol
+
+    cached = {}
+    for t, rt in rts.items():
+        p1, o1, c1, _ = state[t]
+        p2, _, _, m2 = rt.step_cached(p1, o1, c1)
+        cached[t] = (p2, float(m2["loss"]))
+    assert abs(cached["p2p"][1] - cached["allgather"][1]) < TOL
+    assert leafdiff(cached["p2p"][0], cached["allgather"][0]) < grad_tol
+
+    # ---- pipelined: same loss as cached; fresh caches match the
+    # non-deferred (allgather) pipelined step's
+    pipe = {}
+    for t, rt in rts.items():
+        p1, o1, c1, _ = state[t]
+        _, _, cP, mP = rt.step_pipelined(p1, o1, c1)
+        pipe[t] = (cP, float(mP["loss"]))
+    assert abs(pipe["p2p"][1] - cached["p2p"][1]) < 1e-6
+    # each transport pipelines from its own post-refresh state, which has
+    # already diverged by grad_tol under bf16
+    assert leafdiff(pipe["p2p"][0], pipe["allgather"][0]) < sim_tol
+
+    # ---- donation: chained donated steps run clean, no donation warnings
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        rt_d = make_spmd_runtime(cfg, sp, xplan, opt, mesh, axis=axis,
+                                 backend=backend, transport="p2p",
+                                 halo_dtype=halo_dtype)
+        pp = jax.tree.map(jnp.copy, params)
+        oo, cc = opt.init(pp), init_caches(cfg, xplan, parts)
+        for i in range(3):
+            fn = (rt_d.step_refresh, rt_d.step_cached, rt_d.step_pipelined)[i]
+            pp, oo, cc, mm = fn(pp, oo, cc)
+        jax.block_until_ready(mm["loss"])
+        bad = [str(x.message) for x in w
+               if "donat" in str(x.message).lower()]
+        assert not bad, bad
+
+    print(f"OK multi_pod={multi_pod} backend={backend} bf16={bf16} "
+          f"loss_refresh={state['p2p'][3]:.5f} "
+          f"loss_cached={cached['p2p'][1]:.5f} "
+          f"p2p_rows={rows['total']} allgather_rows={rows_ag['total']}")
+
+
+if __name__ == "__main__":
+    main()
