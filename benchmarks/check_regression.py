@@ -1,0 +1,178 @@
+"""Benchmark regression gate: diff experiments/bench_summary.json against
+the committed experiments/baseline.json and exit non-zero on regression.
+
+    PYTHONPATH=src python -m benchmarks.check_regression           # check
+    PYTHONPATH=src python -m benchmarks.check_regression --update  # refresh
+
+The baseline holds, per gated suite, the summary's headline fields.  Field
+classes:
+
+- **bools / ints / strings** — compared exactly.  This covers the
+  deterministic invariants the gate exists for: parity flags, plan-counted
+  bytes and wire rows, replan/event counts, padding shapes.
+- **parity/error floats** (key contains ``err``) — one-sided: current
+  must stay under ``baseline + --err-atol`` (default 1e-5, the repo's
+  parity tolerance).  Getting *more* exact never fails the gate.
+- **non-timing floats** (hit rates, reductions, ratios) — relative
+  tolerance ``--float-rtol`` (default 1e-3; these are numpy-deterministic
+  but may carry last-ulp noise across BLAS/XLA builds).
+- **timing floats** (key matches ``_ms``/``_s``/``time``/``qps``/
+  ``speedup``/``overhead``/...) — only a catastrophic slowdown fails:
+  current must stay under baseline x ``--timing-factor`` (default 25; CI
+  machines are noisy).  Speedups pass.  Timing-derived *bools* (e.g.
+  pipelined-faster-than-unpipelined orderings) are skipped entirely.
+
+A suite present in the baseline but missing (or unreadable/failed) in the
+current summary is a regression — a crashed suite can no longer leave a
+stale green JSON behind.
+
+Refreshing the baseline (after an intentional perf/accounting change):
+run the gated suites with ``REPRO_BENCH_TINY=1`` exactly as CI does, then
+``--update`` and commit the new ``experiments/baseline.json``:
+
+    REPRO_BENCH_TINY=1 PYTHONPATH=src python -m benchmarks.run \
+        --only kernels_bench,comm_volume,serve_bench,adaptive_cache
+    PYTHONPATH=src python -m benchmarks.check_regression --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
+# suites CI re-runs (REPRO_BENCH_TINY=1) before invoking this gate
+GATED_SUITES = ["kernels_bench", "comm_volume", "serve_bench",
+                "adaptive_cache"]
+TIMING_SUFFIXES = ("_ms", "_s", "_seconds")
+TIMING_MARKERS = ("time", "qps", "tok", "wall", "p50", "p99", "speedup",
+                  "overhead", "benefit", "_leq_")
+SKIP_KEYS = ("_mtime",)
+
+
+def is_timing(key: str) -> bool:
+    k = key.lower()
+    return (k.endswith(TIMING_SUFFIXES)
+            or any(m in k for m in TIMING_MARKERS))
+
+
+def compare(baseline: dict, current: dict, float_rtol: float,
+            timing_factor: float, err_atol: float = 1e-5) -> list[str]:
+    """Return a list of human-readable regressions (empty = green)."""
+    problems: list[str] = []
+    for suite, fields in baseline.items():
+        cur = current.get(suite)
+        if not isinstance(cur, dict):
+            problems.append(f"{suite}: missing from current summary")
+            continue
+        if "_failed" in cur or "unreadable" in cur:
+            problems.append(f"{suite}: suite failed/unreadable: "
+                            f"{cur.get('_failed') or cur.get('unreadable')}")
+            continue
+        for key, base in fields.items():
+            if key in SKIP_KEYS:
+                continue
+            if key not in cur:
+                problems.append(f"{suite}.{key}: missing (baseline {base!r})")
+                continue
+            val = cur[key]
+            if is_timing(key):
+                # wall-clock-derived: bools (orderings) skipped, floats
+                # only gate a catastrophic slowdown
+                if (isinstance(base, (int, float)) and not isinstance(base, bool)
+                        and isinstance(val, (int, float))
+                        and val > base * timing_factor):
+                    problems.append(
+                        f"{suite}.{key}: {val:.4g} > {timing_factor}x "
+                        f"baseline {base:.4g}")
+            elif isinstance(base, bool) or isinstance(val, bool):
+                if bool(val) != bool(base):
+                    problems.append(f"{suite}.{key}: {val!r} != baseline "
+                                    f"{base!r}")
+            elif isinstance(base, (int, float)) and isinstance(val, (int, float)):
+                if "err" in key.lower():
+                    if val > base + err_atol:
+                        problems.append(
+                            f"{suite}.{key}: {val:.4g} > baseline "
+                            f"{base:.4g} + {err_atol}")
+                elif isinstance(base, int) and isinstance(val, int):
+                    if val != base:
+                        problems.append(f"{suite}.{key}: {val} != baseline "
+                                        f"{base}")
+                else:
+                    tol = float_rtol * max(abs(base), 1e-12)
+                    if abs(val - base) > tol:
+                        problems.append(
+                            f"{suite}.{key}: {val:.6g} != baseline "
+                            f"{base:.6g} (rtol {float_rtol})")
+            elif val != base:
+                problems.append(f"{suite}.{key}: {val!r} != baseline "
+                                f"{base!r}")
+    return problems
+
+
+def make_baseline(summary: dict, suites: list[str]) -> dict:
+    out = {}
+    for suite in suites:
+        fields = summary.get(suite)
+        if not isinstance(fields, dict):
+            raise SystemExit(f"cannot baseline {suite!r}: not in summary — "
+                             f"run the suite first (see module docstring)")
+        if "_failed" in fields or "unreadable" in fields:
+            raise SystemExit(f"cannot baseline {suite!r}: suite failed")
+        out[suite] = {k: v for k, v in fields.items() if k not in SKIP_KEYS}
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--summary", default=os.path.join(DEFAULT_DIR,
+                                                      "bench_summary.json"))
+    ap.add_argument("--baseline", default=os.path.join(DEFAULT_DIR,
+                                                       "baseline.json"))
+    ap.add_argument("--suites", default=",".join(GATED_SUITES),
+                    help="comma-separated suites to gate/baseline")
+    ap.add_argument("--float-rtol", type=float, default=1e-3)
+    ap.add_argument("--err-atol", type=float, default=1e-5)
+    ap.add_argument("--timing-factor", type=float, default=float(
+        os.environ.get("REPRO_REGRESSION_TIMING_FACTOR", "25")))
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current summary")
+    args = ap.parse_args(argv)
+    suites = [s for s in args.suites.split(",") if s]
+
+    with open(args.summary) as f:
+        summary = json.load(f)
+
+    if args.update:
+        baseline = make_baseline(summary, suites)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"baseline refreshed -> {os.path.relpath(args.baseline)} "
+              f"({sum(len(v) for v in baseline.values())} fields over "
+              f"{len(baseline)} suites)")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    baseline = {k: v for k, v in baseline.items() if k in suites}
+    problems = compare(baseline, summary, args.float_rtol,
+                       args.timing_factor, err_atol=args.err_atol)
+    if problems:
+        print("REGRESSIONS:")
+        for p in problems:
+            print(f"  {p}")
+        print(f"{len(problems)} regression(s) vs "
+              f"{os.path.relpath(args.baseline)}; if intentional, refresh "
+              "with --update (see benchmarks/check_regression.py docstring)")
+        return 1
+    n = sum(len(v) for v in baseline.values())
+    print(f"regression gate green: {n} fields over {len(baseline)} suites "
+          "match baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -136,10 +136,8 @@ def transport_sweep(tiny: bool, transports=("allgather", "p2p")) -> dict:
         pp = jax.tree.map(jnp.copy, params)
         oo = opt.init(pp)
         cc = init_caches(cfg, xplan, parts)
-        for name, fn in (("cached", rt.step_cached),
-                         ("refresh", rt.step_refresh),
-                         ("pipelined", rt.step_pipelined)):
-            hlo = fn.lower(pp, oo, cc).compile().as_text()
+        for name in ("cached", "refresh", "pipelined"):
+            hlo = rt.lower_step(name, pp, oo, cc).compile().as_text()
             cb = collective_bytes(hlo)
             row[f"hlo_{name}_collective_bytes_per_device"] = cb["total"]
             row[f"hlo_{name}_collective_counts"] = cb["counts"]

@@ -1,13 +1,17 @@
 """Benchmark orchestrator: one suite per paper table/figure + roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only name ...]
+    PYTHONPATH=src python -m benchmarks.run [--only name[,name...] ...]
 
-Each suite writes experiments/<name>.json and prints a summary line; the
-final PASS/FAIL recap checks the paper's qualitative claims hold.  After
-every invocation (even a --only subset) the orchestrator folds the
-top-level scalars of ALL experiments/*.json into a single
-experiments/bench_summary.json, so the perf trajectory stays trackable
-across PRs from one artifact.
+``--only`` accepts space- and/or comma-separated suite names and rejects
+unknown ones up front.  Each suite writes experiments/<name>.json and
+prints a summary line; the final PASS/FAIL recap checks the paper's
+qualitative claims hold.  After every invocation (even a --only subset)
+the orchestrator folds the top-level scalars of ALL experiments/*.json
+into a single experiments/bench_summary.json, so the perf trajectory
+stays trackable across PRs from one artifact.  A suite that raises marks
+its summary entry with ``_failed`` (so a stale JSON from an earlier run
+can't masquerade as green — ``benchmarks.check_regression`` treats it as
+a regression) and the process exits non-zero.
 """
 from __future__ import annotations
 
@@ -19,18 +23,20 @@ import time
 
 SUITES = ["halo_obs", "cache_hit", "comm_volume", "rapa_balance",
           "heterogeneous", "convergence", "overall", "kernels_bench",
-          "serve_bench", "roofline"]
+          "serve_bench", "adaptive_cache", "roofline"]
 
 _SUMMARY = "bench_summary"
+# not suite outputs: the folded summary itself and the regression baseline
+_NON_SUITE = {_SUMMARY + ".json", "baseline.json"}
 
 
-def summarize(out_dir: str) -> dict:
+def summarize(out_dir: str, failed: dict | None = None) -> dict:
     """Fold every experiments/*.json into one summary: per file, the
     top-level scalar fields (the headline numbers each suite promotes)
     plus the file's mtime.  Nested sweeps stay in their own files."""
     summary = {}
     for fname in sorted(os.listdir(out_dir)):
-        if not fname.endswith(".json") or fname == _SUMMARY + ".json":
+        if not fname.endswith(".json") or fname in _NON_SUITE:
             continue
         path = os.path.join(out_dir, fname)
         try:
@@ -49,33 +55,48 @@ def summarize(out_dir: str) -> dict:
         scalars["_mtime"] = time.strftime(
             "%Y-%m-%dT%H:%M:%S", time.gmtime(os.path.getmtime(path)))
         summary[fname[:-5]] = scalars
+    # a suite that raised this invocation may have left a stale (or no)
+    # JSON behind — mark it so downstream gates see red, not stale green
+    for name, err in (failed or {}).items():
+        summary.setdefault(name, {})["_failed"] = err
     return summary
 
 
-def write_summary(out_dir: str | None = None) -> str:
+def write_summary(out_dir: str | None = None,
+                  failed: dict | None = None) -> str:
     if out_dir is None:
         out_dir = os.path.join(os.path.dirname(__file__), "..",
                                "experiments")
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, _SUMMARY + ".json")
     with open(path, "w") as f:
-        json.dump(summarize(out_dir), f, indent=1, sort_keys=True)
+        json.dump(summarize(out_dir, failed=failed), f, indent=1,
+                  sort_keys=True)
     return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="suite names, space- and/or comma-separated")
     args = ap.parse_args()
-    names = args.only or SUITES
+    names: list[str] = []
+    for chunk in (args.only or []):
+        names.extend(n for n in chunk.split(",") if n)
+    names = names or SUITES
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        print(f"unknown suite(s) {unknown}; available: {SUITES}",
+              file=sys.stderr)
+        sys.exit(2)
 
     import importlib
     results, failures = {}, []
     for name in names:
-        mod = importlib.import_module(f"benchmarks.{name}")
         print(f"=== {name} ===", flush=True)
         t0 = time.perf_counter()
         try:
+            mod = importlib.import_module(f"benchmarks.{name}")
             mod.main()
             results[name] = "ok"
         except Exception as exc:  # noqa: BLE001 - keep the sweep going
@@ -85,7 +106,7 @@ def main() -> None:
         print(f"--- {name} done in {time.perf_counter() - t0:.1f}s\n",
               flush=True)
 
-    path = write_summary()
+    path = write_summary(failed=dict(failures))
     print(f"=== summary (aggregated -> {os.path.relpath(path)}) ===")
     for name in names:
         print(f"  {name:15s} {results[name]}")

@@ -4,7 +4,8 @@ from .device_profile import (DeviceProfile, PROFILES, PAPER_GROUPS, TPU_V5E,
 from .halo import HaloStats, halo_stats, overlap_histogram, duplicate_count
 from .jaca import (CacheCapacity, cal_capacity, CachePlan, WorkerCachePlan,
                    build_cache_plan, plan_hit_rate, simulate_policy_hit_rate,
-                   comm_bytes_per_step)
+                   comm_bytes_per_step, AdaptivePlanner, plan_from_membership,
+                   ADAPTIVE_POLICIES)
 from .rapa import (RapaConfig, RapaResult, comm_cost, comp_cost,
                    influence_scores, adjust_subgraph, do_partition,
                    memory_bytes)
@@ -16,7 +17,8 @@ __all__ = [
     "HaloStats", "halo_stats", "overlap_histogram", "duplicate_count",
     "CacheCapacity", "cal_capacity", "CachePlan", "WorkerCachePlan",
     "build_cache_plan", "plan_hit_rate", "simulate_policy_hit_rate",
-    "comm_bytes_per_step",
+    "comm_bytes_per_step", "AdaptivePlanner", "plan_from_membership",
+    "ADAPTIVE_POLICIES",
     "RapaConfig", "RapaResult", "comm_cost", "comp_cost", "influence_scores",
     "adjust_subgraph", "do_partition", "memory_bytes",
     "StalenessController", "theorem1_bound",

@@ -23,6 +23,16 @@ than modelling a dynamic access stream.  We compile that ranking into a
 
 FIFO/LRU baselines (paper Figs. 15-16) are provided via a trace simulator
 over the epoch access stream since those policies are genuinely dynamic.
+
+**Online adaptation** (paper §4.2 "lightweight cache update"): the static
+plan above is compiled once; :class:`AdaptivePlanner` makes the tiering a
+*runtime* object.  It ingests per-halo access observations (and, for the
+drift-aware policy, the per-row staleness drift the runtimes measure on
+refresh steps), evolves FIFO/LRU/EWMA eviction state live, and
+``replan()`` materialises the current cache content as a fresh
+:class:`CachePlan`.  Compiled against a capacity-padded (slot-stable)
+exchange layout, the new plan drops into the already-jitted sim/SPMD steps
+without retracing — see ``repro.dist.exchange``.
 """
 from __future__ import annotations
 
@@ -37,9 +47,14 @@ from .device_profile import DeviceProfile
 
 __all__ = ["CacheCapacity", "cal_capacity", "CachePlan", "WorkerCachePlan",
            "build_cache_plan", "plan_hit_rate", "simulate_policy_hit_rate",
-           "comm_bytes_per_step"]
+           "comm_bytes_per_step", "AdaptivePlanner", "plan_from_membership",
+           "ADAPTIVE_POLICIES"]
 
 Policy = Literal["overlap_high", "overlap_low", "random", "fifo", "lru"]
+
+# runtime (online) eviction policies the AdaptivePlanner understands;
+# "static" freezes the initial overlap plan (the paper's JACA baseline)
+ADAPTIVE_POLICIES = ("static", "overlap", "fifo", "lru", "drift")
 
 
 # ---------------------------------------------------------------------------
@@ -305,3 +320,289 @@ def comm_bytes_per_step(plan: CachePlan, feat_dim: int,
         "no_cache_bytes": no_cache,
         "reduction": 1.0 - amortised / max(1, no_cache),
     }
+
+
+# ---------------------------------------------------------------------------
+# Online adaptation: live eviction state -> re-ranked cache plans
+# ---------------------------------------------------------------------------
+
+def plan_from_membership(ps: PartitionSet, local_sets: Sequence[set],
+                         global_set: set, capacity: CacheCapacity,
+                         refresh_every: int) -> CachePlan:
+    """Assemble a :class:`CachePlan` from explicit tier membership.
+
+    ``local_sets[i]`` is worker ``i``'s local-cache gid set (must fit
+    ``c_gpu[i]``), ``global_set`` the shared residency (must fit
+    ``c_cpu``).  Per worker: halo positions whose gid is locally resident
+    form the local tier; of the rest, those globally resident form the
+    global tier; everything else is uncached — the same local-first
+    priority :func:`build_cache_plan` applies.
+    """
+    workers: list[WorkerCachePlan] = []
+    for i, part in enumerate(ps.parts):
+        if len(local_sets[i]) > capacity.c_gpu[i]:
+            raise ValueError(
+                f"worker {i} local membership {len(local_sets[i])} exceeds "
+                f"capacity {capacity.c_gpu[i]}")
+        gids = part.halo_nodes
+        pos = np.arange(part.n_halo)
+        in_local = np.fromiter((int(v) in local_sets[i] for v in gids),
+                               bool, count=part.n_halo) \
+            if part.n_halo else np.zeros(0, bool)
+        in_global = np.fromiter(
+            (int(v) in global_set for v in gids), bool,
+            count=part.n_halo) & ~in_local if part.n_halo \
+            else np.zeros(0, bool)
+        un = ~(in_local | in_global)
+        workers.append(WorkerCachePlan(
+            part_id=i,
+            local_pos=pos[in_local], global_pos=pos[in_global],
+            uncached_pos=pos[un],
+            local_gids=gids[in_local], global_gids=gids[in_global],
+            uncached_gids=gids[un]))
+    if len(global_set) > capacity.c_cpu:
+        raise ValueError(f"global membership {len(global_set)} exceeds "
+                         f"capacity {capacity.c_cpu}")
+    global_gids = np.array(sorted(int(v) for v in global_set), np.int64)
+    return CachePlan(workers=workers, capacity=capacity,
+                     global_gids=global_gids, refresh_every=refresh_every)
+
+
+class _StreamCache:
+    """Live FIFO/LRU eviction state over a gid access stream.
+
+    ``access`` mirrors :func:`simulate_policy_hit_rate`'s trace loop
+    statement-for-statement, so a planner fed the same epoch stream
+    reproduces the simulator's hit sequence exactly (asserted by the
+    tier-1 suite).  Capacity 0 disables the cache (always miss, no
+    insert)."""
+
+    def __init__(self, capacity: int, policy: str):
+        if policy not in ("fifo", "lru"):
+            raise ValueError(policy)
+        self.capacity = int(capacity)
+        self.policy = policy
+        self._fifo: deque[int] = deque()
+        self._set: set[int] = set()
+        self._lru: OrderedDict[int, None] = OrderedDict()
+
+    def access(self, v: int) -> bool:
+        if self.capacity <= 0:
+            return False
+        if self.policy == "fifo":
+            if v in self._set:
+                return True
+            if len(self._set) >= self.capacity and self._fifo:
+                self._set.discard(self._fifo.popleft())
+            self._set.add(v)
+            self._fifo.append(v)
+            return False
+        if v in self._lru:
+            self._lru.move_to_end(v)
+            return True
+        if len(self._lru) >= self.capacity:
+            self._lru.popitem(last=False)
+        self._lru[v] = None
+        return False
+
+    def resident(self) -> set:
+        return set(self._set) if self.policy == "fifo" else set(self._lru)
+
+
+@dataclasses.dataclass
+class AdaptivePlanner:
+    """Online cache adaptation: turn runtime access/drift observations into
+    re-ranked :class:`CachePlan`\\ s at refresh boundaries.
+
+    Policies (``--cache-policy`` in the launcher):
+
+    - ``static``  — never re-ranks; :meth:`replan` returns the initial
+      overlap plan unchanged (the paper's frozen JACA baseline);
+    - ``overlap`` — re-runs the Eq. 2 overlap ranking (a no-op re-plan on
+      a static graph: exercises the slot-stable swap path end-to-end);
+    - ``fifo`` / ``lru`` — live eviction state per worker-local cache plus
+      the shared global cache, exactly the trace semantics of
+      :func:`simulate_policy_hit_rate`; :meth:`replan` materialises the
+      current residents;
+    - ``drift``   — ranks by an exponentially-weighted access frequency
+      damped by the measured per-row staleness drift
+      (``score = ewma_freq / (1 + drift_weight * ewma_drift)``): hot rows
+      whose stale values stay accurate are the cheapest to cache under
+      bounded staleness.
+
+    The planner is pure numpy/python — observation costs are off the
+    jitted step path, matching the paper's "lightweight cache update"
+    claim.
+    """
+    ps: PartitionSet
+    capacity: CacheCapacity
+    refresh_every: int = 4
+    policy: str = "lru"
+    seed: int = 0
+    decay: float = 0.8          # EWMA decay for access frequency / drift
+    drift_weight: float = 1.0
+
+    def __post_init__(self):
+        if self.policy not in ADAPTIVE_POLICIES:
+            raise ValueError(f"unknown adaptive policy {self.policy!r}; "
+                             f"expected one of {ADAPTIVE_POLICIES}")
+        n = self.ps.graph.num_nodes
+        union = self.ps.halo_union()
+        self.plan = build_cache_plan(self.ps, self.capacity,
+                                     refresh_every=self.refresh_every,
+                                     policy="overlap_high", seed=self.seed)
+        self._initial = self.plan
+        if self.policy in ("fifo", "lru"):
+            self._local = [
+                _StreamCache(min(self.capacity.c_gpu[i], pt.n_halo),
+                             self.policy)
+                for i, pt in enumerate(self.ps.parts)]
+            self._global = _StreamCache(min(self.capacity.c_cpu, union.size),
+                                        self.policy)
+        else:
+            self._local, self._global = None, None
+        self._freq = np.zeros(n, np.float64)     # EWMA access frequency
+        self._vdrift = np.zeros(n, np.float64)   # EWMA per-row value drift
+        self._hits = 0
+        self._accesses = 0
+        self._steps = 0
+        self._sync_membership()
+
+    # -- observation ------------------------------------------------------
+
+    def _sync_membership(self) -> None:
+        self._local_sets = [set(int(v) for v in w.local_gids)
+                            for w in self.plan.workers]
+        self._global_plan_set = set()
+        for w in self.plan.workers:
+            self._global_plan_set.update(int(v) for v in w.global_gids)
+        # sorted arrays for vectorized membership tests in observe_step
+        self._local_sorted = [np.sort(w.local_gids)
+                              for w in self.plan.workers]
+        self._global_sorted = np.array(
+            sorted(self._global_plan_set), np.int64)
+
+    def observe_step(self, accessed: Sequence[np.ndarray] | None = None,
+                     layers: int = 1) -> dict:
+        """Ingest one step's halo accesses.
+
+        ``accessed[i]`` is the gid array worker ``i`` touched (default: its
+        full halo — exact for full-batch training, where every layer sweeps
+        every halo vertex).  Per layer, workers are visited in partition
+        order — the same stream order :func:`_epoch_stream` replays.
+        Returns this call's ``{"accesses", "hits"}`` (cumulative counters
+        feed :meth:`hit_rate`).  Hits are counted against the *live*
+        eviction state for fifo/lru (simulator semantics) and against the
+        installed plan's tiers for the plan-ranked policies.
+        """
+        if accessed is None:
+            accessed = [pt.halo_nodes for pt in self.ps.parts]
+        hits = accesses = 0
+        decay_once = True
+        for _ in range(max(1, layers)):
+            for i, gids in enumerate(accessed):
+                gids = np.asarray(gids)
+                accesses += gids.size
+                if self.policy in ("fifo", "lru"):
+                    # per-access loop is load-bearing: the eviction state
+                    # must evolve in stream order to stay bit-exact with
+                    # the trace simulator
+                    loc, glob = self._local[i], self._global
+                    for v in gids:
+                        v = int(v)
+                        if loc.access(v):
+                            hits += 1
+                        elif glob.access(v):
+                            hits += 1
+                elif gids.size:
+                    hit_mask = (np.isin(gids, self._local_sorted[i])
+                                | np.isin(gids, self._global_sorted))
+                    hits += int(hit_mask.sum())
+            if decay_once:
+                # EWMA frequency update: one decay per observed step, then
+                # accumulate this step's multiplicity
+                self._freq *= self.decay
+                decay_once = False
+            for gids in accessed:
+                gids = np.asarray(gids)
+                if gids.size:
+                    np.add.at(self._freq, gids, 1.0)
+        self._hits += hits
+        self._accesses += accesses
+        self._steps += 1
+        return {"accesses": accesses, "hits": hits}
+
+    def observe_drift(self, local_rows: np.ndarray,
+                      global_rows: np.ndarray) -> None:
+        """Fold a refresh step's per-row staleness drift (the runtimes'
+        ``drift_local_rows [P, R]`` / ``drift_global_rows [G]`` metrics)
+        into the per-vertex EWMA the ``drift`` policy ranks by.  Row order
+        follows the *installed* plan: worker ``i``'s local rows are
+        ``plan.workers[i].local_gids``; buffer rows are the sorted unique
+        consumed global gids."""
+        local_rows = np.asarray(local_rows, np.float64)
+        self._vdrift *= self.decay
+        for i, w in enumerate(self.plan.workers):
+            k = w.local_gids.size
+            if k:
+                np.maximum.at(self._vdrift, w.local_gids,
+                              (1 - self.decay) * local_rows[i, :k])
+        used = [w.global_gids for w in self.plan.workers
+                if w.global_gids.size]
+        if used:
+            buf_gids = np.unique(np.concatenate(used))
+            rows = np.asarray(global_rows, np.float64)[: buf_gids.size]
+            np.maximum.at(self._vdrift, buf_gids, (1 - self.decay) * rows)
+
+    # -- re-planning ------------------------------------------------------
+
+    def _ranked_plan(self, score: np.ndarray) -> CachePlan:
+        """Top-score tiering under the capacity constraints (ties broken
+        by gid for determinism)."""
+        union = self.ps.halo_union()
+        local_sets = []
+        for i, pt in enumerate(self.ps.parts):
+            gids = pt.halo_nodes
+            c = min(self.capacity.c_gpu[i], pt.n_halo)
+            order = np.argsort(-score[gids], kind="stable")
+            local_sets.append(set(int(v) for v in gids[order[:c]]))
+        c_cpu = min(self.capacity.c_cpu, union.size)
+        order = np.argsort(-score[union], kind="stable")
+        global_set = set(int(v) for v in union[order[:c_cpu]])
+        return plan_from_membership(self.ps, local_sets, global_set,
+                                    self.capacity, self.refresh_every)
+
+    def replan(self) -> CachePlan:
+        """Materialise the current eviction/ranking state as a new plan
+        (and install it as the planner's reference membership)."""
+        if self.policy == "static":
+            return self.plan
+        if self.policy == "overlap":
+            new = build_cache_plan(self.ps, self.capacity,
+                                   refresh_every=self.refresh_every,
+                                   policy="overlap_high", seed=self.seed)
+        elif self.policy in ("fifo", "lru"):
+            local_sets = [c.resident() for c in self._local]
+            glob = self._global.resident()
+            new = plan_from_membership(self.ps, local_sets, glob,
+                                       self.capacity, self.refresh_every)
+        else:  # drift
+            score = self._freq / (1.0 + self.drift_weight * self._vdrift)
+            new = self._ranked_plan(score)
+        self.plan = new
+        self._sync_membership()
+        return new
+
+    def exchange_plan(self, plan: CachePlan | None = None):
+        """Compile ``plan`` (default: the installed one) against the
+        planner's slot-stable capacity padding — every plan this planner
+        emits shares one shape signature, so swaps never retrace."""
+        from repro.dist.exchange import build_exchange_plan, exchange_capacity
+        if not hasattr(self, "_pad"):
+            self._pad = exchange_capacity(self.ps, self.capacity)
+        return build_exchange_plan(self.ps, plan or self.plan,
+                                   pad_to=self._pad)
+
+    def hit_rate(self) -> float:
+        """Cumulative hit rate over every observed access."""
+        return self._hits / max(1, self._accesses)

@@ -6,6 +6,13 @@ decides which step to run; the fixed-period policy is the paper's; the
 adaptive policy (paper §6 'Adaptive Staleness Control' future work) shrinks
 the period when the measured embedding drift approaches the epsilon_H bound
 — implemented here as a beyond-paper feature.
+
+The controller also schedules *re-planning* for the online cache
+adaptation loop (``repro.core.jaca.AdaptivePlanner``): tier membership may
+only change at a refresh boundary (the refresh rewrites every cache row,
+so a re-ranked plan never reads rows laid out by its predecessor), and
+``replan_every`` thins that further to every k-th refresh — re-ranking
+costs host time, so it should pay for itself in saved exchange rows.
 """
 from __future__ import annotations
 
@@ -25,8 +32,10 @@ class StalenessController:
     grow: float = 1.25
     min_period: int = 1
     max_period: int = 64
+    replan_every: int = 1           # re-rank tiers every k-th refresh
     _step: int = 0
     _period: float = 0.0
+    _refreshes: int = 0
 
     def __post_init__(self):
         self._period = float(self.refresh_every)
@@ -35,9 +44,24 @@ class StalenessController:
         """True if the upcoming step must be a refresh step."""
         return self._step % max(1, int(round(self._period))) == 0
 
-    def observe(self, drift_inf_norm: float | None = None) -> None:
+    def should_replan(self) -> bool:
+        """True if the upcoming step is a refresh boundary at which the
+        adaptive planner may install a re-ranked plan.  Never true on the
+        warm-up step (step 0's refresh populates the initial plan's
+        caches), then every ``replan_every``-th refresh."""
+        return (self.should_refresh() and self._step > 0
+                and self._refreshes % max(1, self.replan_every) == 0)
+
+    def observe(self, drift_inf_norm: float | None = None,
+                refreshed: bool | None = None) -> None:
         """Advance one step; with ``adaptive``, tune the period from the
-        measured ||H - H_hat||_inf drift of the last refresh."""
+        measured ||H - H_hat||_inf drift of the last refresh.
+        ``refreshed`` records whether the executed step actually was a
+        refresh (defaults to what ``should_refresh`` prescribed)."""
+        was_refresh = (self.should_refresh() if refreshed is None
+                       else refreshed)
+        if was_refresh:
+            self._refreshes += 1
         self._step += 1
         if self.adaptive and drift_inf_norm is not None:
             if drift_inf_norm > self.eps_h:

@@ -8,16 +8,19 @@
 - :mod:`repro.dist.capgnn_spmd` — the same step functions lowered through
   ``shard_map`` collectives over a device mesh (flat or multi-pod).
 """
-from .exchange import (ExchangePlan, ExchangeTier, GlobalTier, StackedEllPack,
-                       StackedParts, build_exchange_plan, stack_partitions)
-from .capgnn_sim import (SimRuntime, TrainReport, init_caches,
-                         make_sim_runtime, train_capgnn)
-from .capgnn_spmd import SpmdRuntime, make_spmd_runtime
+from .exchange import (ExchangeCapacity, ExchangePlan, ExchangeTier,
+                       GlobalTier, StackedEllPack, StackedParts,
+                       build_exchange_plan, exchange_capacity,
+                       stack_partitions)
+from .capgnn_sim import (SimRuntime, TrainReport, exchange_arrays,
+                         init_caches, make_sim_runtime, train_capgnn)
+from .capgnn_spmd import SpmdRuntime, make_spmd_runtime, spmd_exchange_arrays
 
 __all__ = [
-    "ExchangePlan", "ExchangeTier", "GlobalTier", "StackedEllPack",
-    "StackedParts", "build_exchange_plan", "stack_partitions",
-    "SimRuntime", "TrainReport", "init_caches", "make_sim_runtime",
-    "train_capgnn",
-    "SpmdRuntime", "make_spmd_runtime",
+    "ExchangeCapacity", "ExchangePlan", "ExchangeTier", "GlobalTier",
+    "StackedEllPack", "StackedParts", "build_exchange_plan",
+    "exchange_capacity", "stack_partitions",
+    "SimRuntime", "TrainReport", "exchange_arrays", "init_caches",
+    "make_sim_runtime", "train_capgnn",
+    "SpmdRuntime", "make_spmd_runtime", "spmd_exchange_arrays",
 ]

@@ -21,6 +21,12 @@ Three step flavours (paper §4.2/§4.3):
   runtime's ``transport="p2p"`` implements the overlap for real
   (double-buffered ``ppermute`` rings interleaved with the layer loop —
   see :mod:`repro.dist.capgnn_spmd`).
+
+The jitted steps take the exchange index arrays as traced *arguments*
+(a read plan and an emit plan — identical except on a plan-transition
+step), so online cache adaptation (``SimRuntime.set_plan`` /
+``step_transition`` with a capacity-padded slot-stable layout) swaps a
+re-ranked plan into a running step without retracing.
 """
 from __future__ import annotations
 
@@ -42,7 +48,7 @@ from .exchange import ExchangePlan, ExchangeTier, GlobalTier, StackedParts
 
 __all__ = ["make_sim_runtime", "SimRuntime", "init_caches", "train_capgnn",
            "TrainReport", "RUNTIME_BACKENDS", "check_backend",
-           "make_adj_builder", "halo_dtype_info"]
+           "make_adj_builder", "halo_dtype_info", "exchange_arrays"]
 
 
 def halo_dtype_info(halo_dtype) -> tuple:
@@ -83,7 +89,20 @@ def _glob_dict(g: GlobalTier) -> dict:
         "read_pos": jnp.asarray(g.read_pos, jnp.int32),
         "read_buf_idx": jnp.asarray(g.read_buf_idx, jnp.int32),
         "read_valid": jnp.asarray(g.read_valid),
+        "buf_valid": jnp.asarray(g.buf_valid),
     }
+
+
+def exchange_arrays(xplan: ExchangePlan) -> dict:
+    """Device pytree of one plan's tier index arrays + valid masks.
+
+    The jitted steps take this pytree as a *traced argument* (not a baked
+    constant), so swapping in another plan's arrays — same shapes under a
+    capacity-padded layout — re-plans the running step without retracing.
+    """
+    return {"un": _tier_dict(xplan.uncached),
+            "loc": _tier_dict(xplan.local),
+            "gl": _glob_dict(xplan.glob)}
 
 
 def _pull(td: dict, h: jnp.ndarray, halo_dtype=None) -> jnp.ndarray:
@@ -119,12 +138,17 @@ def _build_global(gd: dict, h: jnp.ndarray, halo_dtype=None) -> jnp.ndarray:
     """Fill the deduplicated global buffer ``[G, d]`` from owners' rows.
     The buffer is stored dequantised (compute dtype); with ``halo_dtype``
     the owners' payload is cast before transport, so the buffer carries
-    exactly the rows a compressed wire delivers."""
+    exactly the rows a compressed wire delivers.  Capacity-padding slots
+    (``buf_valid`` false) are zeroed so caches/drift stats never carry
+    garbage."""
     p = h.shape[0]
     payload = h[jnp.arange(p)[:, None], gd["send_row"]]          # [P, S, d]
     if halo_dtype is not None:
         payload = payload.astype(halo_dtype)
-    return payload[gd["src_part"], gd["src_slot"]].astype(h.dtype)  # [G, d]
+    rows = payload[gd["src_part"], gd["src_slot"]].astype(h.dtype)  # [G, d]
+    if "buf_valid" in gd:
+        rows = jnp.where(gd["buf_valid"][:, None], rows, 0.0)
+    return rows
 
 
 def _read_global(gd: dict, buf: jnp.ndarray, halo: jnp.ndarray) -> jnp.ndarray:
@@ -205,7 +229,7 @@ def init_caches(cfg: GNNConfig, xplan: ExchangePlan, num_parts: int) -> dict:
     """
     dims = cfg.feat_dims[1: cfg.num_layers]
     r_local = int(np.asarray(xplan.local.recv_halo_pos).shape[1])
-    g = xplan.glob.n_unique
+    g = xplan.glob.buf_size
     return {
         "local": [jnp.zeros((num_parts, r_local, d), jnp.float32)
                   for d in dims],
@@ -230,6 +254,40 @@ class SimRuntime:
     caches0: dict
     backend: str = "edges"
     halo_dtype_bytes: int = 4   # actual wire width per halo payload entry
+    # online adaptation plumbing: the jitted step impls take the exchange
+    # arrays of the (read, emit) plans as traced arguments; `_state` holds
+    # the currently-installed plan's arrays.
+    jit_steps: dict | None = dataclasses.field(default=None, repr=False)
+    _state: dict | None = dataclasses.field(default=None, repr=False)
+
+    def set_plan(self, xplan: ExchangePlan) -> None:
+        """Install a re-ranked plan.  Under a capacity-padded (slot-stable)
+        layout the jitted steps keep their compiled executables — only the
+        index data changes.  The caches' *content* still reflects the old
+        tiering, so the next step must be a refresh (or have been emitted
+        by :meth:`step_transition`)."""
+        self.xplan = xplan
+        self._state["xarr"] = exchange_arrays(xplan)
+
+    def step_transition(self, params, opt_state, caches,
+                        new_xplan: ExchangePlan):
+        """Pipelined plan switch: consume the *current* plan's stale tiers
+        (and its uncached exchange) while prefetching the **new** plan's
+        tier rows in the refresh windows; the emitted caches are laid out
+        for ``new_xplan``, which becomes the installed plan."""
+        xe = exchange_arrays(new_xplan)
+        out = self.jit_steps["pipelined"](params, opt_state, caches,
+                                          self._state["xarr"], xe)
+        self.xplan = new_xplan
+        self._state["xarr"] = xe
+        return out
+
+    def lower_step(self, name: str, params, opt_state, caches):
+        """Lower one jitted step flavour (``"refresh" | "cached" |
+        "pipelined"``) with the installed plan's exchange arrays — for HLO
+        inspection/cost tooling."""
+        xa = self._state["xarr"]
+        return self.jit_steps[name].lower(params, opt_state, caches, xa, xa)
 
 
 def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
@@ -271,9 +329,6 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
              for k, m in (("train", sp.train_mask), ("val", sp.val_mask),
                           ("test", sp.test_mask))}
     adj_leaves, build_adj = make_adj_builder(sp, backend, interpret)
-    un_d = _tier_dict(xplan.uncached)
-    loc_d = _tier_dict(xplan.local)
-    glob_d = _glob_dict(xplan.glob)
 
     def layer_all(lp, h, halo, is_last):
         def one(lv, hi, hhi):
@@ -282,7 +337,12 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             return _layer_apply(cfg, lp, adj, h_local, ni, is_last)
         return jax.vmap(one)(adj_leaves, h, halo)
 
-    def forward(params, caches, use_stale: bool):
+    def forward(params, caches, xr, xe, use_stale: bool):
+        """``xr`` is the installed (read) plan: stale caches are scattered
+        at its positions and its uncached tier is exchanged.  ``xe`` is the
+        emit plan whose tier rows are pulled fresh — identical to ``xr``
+        except on a plan-transition step, where the fresh pulls prefetch
+        the *next* plan's rows."""
         h = feats
         fresh = {"local": [], "global": []}
         for li, lp in enumerate(params):
@@ -291,58 +351,87 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             else:
                 d = h.shape[-1]
                 halo = jnp.zeros((p, nh, d), h.dtype)
-                halo = _scatter(halo, un_d["recv_halo_pos"],
-                                _pull(un_d, h, hdt), un_d["recv_valid"])
-                loc_fresh = _pull(loc_d, h, hdt)
-                buf_fresh = _build_global(glob_d, h, hdt)
-                loc_use = caches["local"][li - 1] if use_stale else loc_fresh
-                buf_use = caches["global"][li - 1] if use_stale else buf_fresh
-                halo = _scatter(halo, loc_d["recv_halo_pos"], loc_use,
-                                loc_d["recv_valid"])
-                halo = _read_global(glob_d, buf_use, halo)
+                halo = _scatter(halo, xr["un"]["recv_halo_pos"],
+                                _pull(xr["un"], h, hdt),
+                                xr["un"]["recv_valid"])
+                loc_fresh = _pull(xe["loc"], h, hdt)
+                buf_fresh = _build_global(xe["gl"], h, hdt)
+                if use_stale:
+                    loc_use, loc_t = caches["local"][li - 1], xr["loc"]
+                    buf_use, gl_t = caches["global"][li - 1], xr["gl"]
+                else:
+                    loc_use, loc_t = loc_fresh, xe["loc"]
+                    buf_use, gl_t = buf_fresh, xe["gl"]
+                halo = _scatter(halo, loc_t["recv_halo_pos"], loc_use,
+                                loc_t["recv_valid"])
+                halo = _read_global(gl_t, buf_use, halo)
                 fresh["local"].append(loc_fresh)
                 fresh["global"].append(buf_fresh)
             h = layer_all(lp, h, halo, is_last=(li == layers - 1))
         return h, fresh
 
-    def loss_fn(params, caches, use_stale: bool):
-        logits, fresh = forward(params, caches, use_stale)
+    def loss_fn(params, caches, xr, xe, use_stale: bool):
+        logits, fresh = forward(params, caches, xr, xe, use_stale)
         flat = logits.reshape(-1, logits.shape[-1])
         loss = cross_entropy_loss(flat, labels, masks["train"])
         return loss, (flat, fresh)
 
     def make_step(use_stale: bool, emit_fresh: bool):
-        def step(params, opt_state, caches):
+        def step(params, opt_state, caches, xr, xe):
             (loss, (flat, fresh)), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params, caches, use_stale)
+                loss_fn, has_aux=True)(params, caches, xr, xe, use_stale)
             new_params, new_state = opt.update(grads, opt_state, params)
             metrics = {"loss": loss,
                        "acc": accuracy(flat, labels, masks["train"])}
             if emit_fresh:
-                drifts = [jnp.max(jnp.abs(a - b)) for a, b in
-                          zip(fresh["local"] + fresh["global"],
-                              caches["local"] + caches["global"])
+                pairs = list(zip(fresh["local"] + fresh["global"],
+                                 caches["local"] + caches["global"]))
+                drifts = [jnp.max(jnp.abs(a - b)) for a, b in pairs
                           if a.size]
                 metrics["drift"] = (jnp.max(jnp.stack(drifts)) if drifts
                                     else jnp.zeros(()))
+                # per-row drift stats for the drift-aware planner policy
+                # (max over layers and feature dim; meaningful when xr == xe)
+                n_ex = len(fresh["local"])
+                if n_ex:
+                    loc_rows = [jnp.max(jnp.abs(a - b), axis=-1)
+                                for a, b in pairs[:n_ex]]
+                    gl_rows = [jnp.max(jnp.abs(a - b), axis=-1)
+                               for a, b in pairs[n_ex:]]
+                    metrics["drift_local_rows"] = jnp.max(
+                        jnp.stack(loc_rows), axis=0)          # [P, Rloc]
+                    metrics["drift_global_rows"] = jnp.max(
+                        jnp.stack(gl_rows), axis=0)           # [G]
             out_caches = fresh if emit_fresh else caches
             return new_params, new_state, out_caches, metrics
-        # steady-state steps rewrite (params, opt_state, caches) in place
+        # steady-state steps rewrite (params, opt_state, caches) in place;
+        # the exchange arrays (xr, xe) are NOT donated — they are reused
+        # across steps and swapped wholesale by set_plan/step_transition
         return jax.jit(step, donate_argnums=(0, 1, 2) if donate else ())
 
     caches0 = init_caches(cfg, xplan, p)
 
-    @jax.jit
-    def forward_fresh(params):
-        logits, _ = forward(params, caches0, False)
+    def _fwd_fresh(params, xr):
+        logits, _ = forward(params, caches0, xr, xr, False)
         return logits
 
-    @jax.jit
-    def _eval_flat(params):
-        return forward_fresh(params).reshape(-1, cfg.out_dim)
+    jit_steps = {"refresh": make_step(False, True),
+                 "cached": make_step(True, False),
+                 "pipelined": make_step(True, True),
+                 "forward": jax.jit(_fwd_fresh)}
+    state = {"xarr": exchange_arrays(xplan)}
+
+    def wrap(name):
+        def stepper(params, opt_state, caches):
+            xa = state["xarr"]
+            return jit_steps[name](params, opt_state, caches, xa, xa)
+        return stepper
+
+    def forward_fresh(params):
+        return jit_steps["forward"](params, state["xarr"])
 
     def evaluate(params, split: str = "val"):
-        flat = _eval_flat(params)
+        flat = forward_fresh(params).reshape(-1, cfg.out_dim)
         m = masks[split]
         return (float(cross_entropy_loss(flat, labels, m)),
                 float(accuracy(flat, labels, m)))
@@ -353,12 +442,13 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
 
     return SimRuntime(cfg=cfg, xplan=xplan, comm_dims=comm_dims,
                       forward_fresh=forward_fresh,
-                      step_refresh=make_step(False, True),
-                      step_cached=make_step(True, False),
-                      step_pipelined=make_step(True, True),
+                      step_refresh=wrap("refresh"),
+                      step_cached=wrap("cached"),
+                      step_pipelined=wrap("pipelined"),
                       evaluate=evaluate,
                       caches0=caches0, backend=backend,
-                      halo_dtype_bytes=hd_bytes)
+                      halo_dtype_bytes=hd_bytes,
+                      jit_steps=jit_steps, _state=state)
 
 
 # ---------------------------------------------------------------------------
@@ -375,14 +465,27 @@ class TrainReport:
     refresh_steps: int
     cached_steps: int
     wall_time_s: float
+    replan_events: int = 0
+    hit_rate: float | None = None    # planner-observed (adaptive runs only)
     final_opt_state: object = None   # for checkpoint/resume (launch.train)
+
+
+def _step_rows(x_read: ExchangePlan, x_emit: ExchangePlan,
+               refresh: bool) -> int:
+    """Exact per-layer wire rows of one step: the *read* plan's uncached
+    tier moves every step; on a refresh the *emit* plan's cached tiers are
+    (pre)fetched.  ``x_read is x_emit`` except on a plan-transition step."""
+    n = x_read.uncached.n_rows
+    if refresh:
+        n += x_emit.local.n_rows + x_emit.glob.n_unique
+    return n
 
 
 def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
                  num_parts: int, opt: Optimizer, epochs: int = 100,
                  eval_every: int = 0, controller: StalenessController | None = None,
                  pipeline: bool = False, seed: int = 0,
-                 params0=None, opt_state0=None
+                 params0=None, opt_state0=None, planner=None
                  ) -> tuple[list, TrainReport]:
     """Full-batch CaPGNN training under the staleness schedule.
 
@@ -393,6 +496,17 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     scheduled refreshes (after warm-up) run as ``step_pipelined`` — the
     refresh payload rides along with the compute instead of a synchronous
     exchange phase; bytes are identical, latency is hidden.
+
+    ``planner`` (a :class:`repro.core.jaca.AdaptivePlanner`) switches on
+    online cache adaptation: at the controller's re-plan boundaries
+    (refresh steps, thinned by ``controller.replan_every``) the planner's
+    live eviction state is materialised into a new plan and swapped into
+    the runtime — via :meth:`~SimRuntime.step_transition` when pipelining
+    (the transition step prefetches the *new* plan's rows inside the old
+    plan's refresh windows) or ``set_plan`` + a plain refresh otherwise.
+    The runtime must have been built against the planner's capacity-padded
+    exchange layout so the swap never retraces; byte accounting follows
+    the *active* plan(s) per step and stays exact across re-plan events.
 
     ``params0``/``opt_state0`` resume from checkpointed state instead of a
     fresh init (the staleness schedule restarts, whose first step is a
@@ -415,24 +529,50 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     comm = 0
     vanilla = 0
     refresh_steps = 0
+    replan_events = 0
+    x_active = xplan
     t0 = time.perf_counter()
     for e in range(epochs):
         refresh = controller.should_refresh()
-        if refresh and pipeline and controller.step > 0:
-            step_fn = runtime.step_pipelined
-        elif refresh:
-            step_fn = runtime.step_refresh
+        replan = planner is not None and controller.should_replan()
+        if replan:
+            x_next = planner.exchange_plan(planner.replan())
+            if pipeline:
+                # transition step: consume/exchange on the old plan,
+                # prefetch the new plan's tier rows in the ring windows
+                params, opt_state, caches, m = runtime.step_transition(
+                    params, opt_state, caches, x_next)
+                step_rows = _step_rows(x_active, x_next, refresh=True)
+            else:
+                runtime.set_plan(x_next)
+                params, opt_state, caches, m = runtime.step_refresh(
+                    params, opt_state, caches)
+                step_rows = _step_rows(x_next, x_next, refresh=True)
+            x_active = x_next
+            replan_events += 1
         else:
-            step_fn = runtime.step_cached
-        params, opt_state, caches, m = step_fn(params, opt_state, caches)
+            if refresh and pipeline and controller.step > 0:
+                step_fn = runtime.step_pipelined
+            elif refresh:
+                step_fn = runtime.step_refresh
+            else:
+                step_fn = runtime.step_cached
+            params, opt_state, caches, m = step_fn(params, opt_state, caches)
+            step_rows = _step_rows(x_active, x_active, refresh=refresh)
         losses.append(float(m["loss"]))
-        comm += sum(xplan.bytes_per_step(d, refresh=refresh,
-                                         dtype_bytes=dtype_bytes)
-                    for d in dims)
+        comm += sum(step_rows * d * dtype_bytes for d in dims)
         vanilla += sum(xplan.total_halo * d * dtype_bytes for d in dims)
         refresh_steps += int(refresh)
-        drift = float(m["drift"]) if "drift" in m else None
-        controller.observe(drift)
+        # On a transition step the fresh rows are laid out for the NEW plan
+        # while the compared caches hold the OLD plan's rows, so the drift
+        # metrics compare different vertices — skip them entirely there.
+        drift = (float(m["drift"]) if "drift" in m and not replan else None)
+        if planner is not None:
+            planner.observe_step(layers=max(1, len(dims)))
+            if "drift_local_rows" in m and not replan:
+                planner.observe_drift(np.asarray(m["drift_local_rows"]),
+                                      np.asarray(m["drift_global_rows"]))
+        controller.observe(drift, refreshed=refresh)
         if eval_every and (e + 1) % eval_every == 0:
             val_acc.append(runtime.evaluate(params, "val")[1])
     wall = time.perf_counter() - t0
@@ -442,5 +582,7 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
         comm_bytes_vanilla=vanilla,
         comm_reduction=1.0 - comm / max(vanilla, 1),
         refresh_steps=refresh_steps, cached_steps=epochs - refresh_steps,
-        wall_time_s=wall, final_opt_state=opt_state)
+        wall_time_s=wall, replan_events=replan_events,
+        hit_rate=planner.hit_rate() if planner is not None else None,
+        final_opt_state=opt_state)
     return params, report

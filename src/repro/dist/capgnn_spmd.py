@@ -63,9 +63,41 @@ from repro.optim import Optimizer
 from .capgnn_sim import halo_dtype_info, init_caches, make_adj_builder
 from .exchange import ExchangePlan, StackedParts
 
-__all__ = ["make_spmd_runtime", "SpmdRuntime", "TRANSPORTS"]
+__all__ = ["make_spmd_runtime", "SpmdRuntime", "TRANSPORTS",
+           "spmd_exchange_arrays"]
 
 TRANSPORTS = ("allgather", "p2p")
+
+
+def spmd_exchange_arrays(xplan: ExchangePlan, p2p: bool) -> dict:
+    """One plan's exchange index arrays in the SPMD runtime's layout:
+    ``"sh"`` leaves are ``[P, ...]`` and sharded over the partition axis,
+    ``"rep"`` leaves (the global buffer's source addressing) replicated.
+    The jitted steps take this pytree as a traced argument, so a
+    capacity-padded re-plan swaps in without retracing."""
+
+    def tier_arrays(t):
+        d = {"send_row": t.send_row,
+             "recv_src_part": t.recv_src_part,
+             "recv_src_slot": t.recv_src_slot,
+             "recv_halo_pos": t.recv_halo_pos,
+             "recv_valid": t.recv_valid}
+        if p2p:
+            d.update(peer_send_row=t.peer_send_row,
+                     peer_send_valid=t.peer_send_valid,
+                     recv_peer_slot=t.recv_peer_slot)
+        return d
+
+    sh = {"un": tier_arrays(xplan.uncached),
+          "loc": tier_arrays(xplan.local),
+          "gl": {"send_row": xplan.glob.send_row,
+                 "read_pos": xplan.glob.read_pos,
+                 "read_buf_idx": xplan.glob.read_buf_idx,
+                 "read_valid": xplan.glob.read_valid}}
+    rep = {"g_src_part": xplan.glob.src_part,
+           "g_src_slot": xplan.glob.src_slot,
+           "g_buf_valid": xplan.glob.buf_valid}
+    return jax.tree.map(jnp.asarray, {"sh": sh, "rep": rep})
 
 
 def _shift_perm(p: int, r: int) -> list:
@@ -148,12 +180,42 @@ class SpmdRuntime:
     backend: str = "edges"
     transport: str = "allgather"
     halo_dtype_bytes: int = 4
+    jit_steps: dict | None = dataclasses.field(default=None, repr=False)
+    _state: dict | None = dataclasses.field(default=None, repr=False)
 
     def wire_rows(self, refresh: bool, padded: bool = False) -> dict:
         """Rows this runtime's transport moves in one layer exchange (see
         :meth:`repro.dist.ExchangePlan.transport_rows`)."""
         return self.xplan.transport_rows(self.transport, refresh,
                                          padded=padded)
+
+    def set_plan(self, xplan: ExchangePlan) -> None:
+        """Install a re-ranked plan (slot-stable capacity-padded layout:
+        no retrace).  Cache content still follows the old tiering — the
+        next step must refresh, or come from :meth:`step_transition`."""
+        self.xplan = xplan
+        self._state["xarr"] = spmd_exchange_arrays(
+            xplan, p2p=self.transport == "p2p")
+
+    def step_transition(self, params, opt_state, caches,
+                        new_xplan: ExchangePlan):
+        """Pipelined plan switch: stale consumption + uncached exchange
+        run on the installed plan while the refresh rings prefetch the
+        **new** plan's tier rows; the emitted caches are laid out for
+        ``new_xplan``, which becomes the installed plan."""
+        xe = spmd_exchange_arrays(new_xplan, p2p=self.transport == "p2p")
+        out = self.jit_steps["pipelined"](params, opt_state, caches,
+                                          self._state["xarr"], xe)
+        self.xplan = new_xplan
+        self._state["xarr"] = xe
+        return out
+
+    def lower_step(self, name: str, params, opt_state, caches):
+        """Lower one jitted step flavour (``"refresh" | "cached" |
+        "pipelined"``) with the installed plan's exchange arrays — for HLO
+        inspection/cost tooling."""
+        xa = self._state["xarr"]
+        return self.jit_steps[name].lower(params, opt_state, caches, xa, xa)
 
 
 def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
@@ -191,46 +253,35 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
     hdt, hd_bytes = halo_dtype_info(halo_dtype)
     p2p = transport == "p2p"
 
-    def tier_arrays(t):
-        d = {"send_row": t.send_row,
-             "recv_src_part": t.recv_src_part,
-             "recv_src_slot": t.recv_src_slot,
-             "recv_halo_pos": t.recv_halo_pos,
-             "recv_valid": t.recv_valid}
-        if p2p:
-            d.update(peer_send_row=t.peer_send_row,
-                     peer_send_valid=t.peer_send_valid,
-                     recv_peer_slot=t.recv_peer_slot)
-        return d
-
-    # Sharded batch: leading dim = partition. Tier recv/read/send sides are
-    # per-partition too, so they shard the same way.
+    # Sharded batch: leading dim = partition.  The exchange index arrays
+    # are NOT baked here — they travel as step arguments (xr/xe pytrees
+    # from spmd_exchange_arrays) so online re-planning swaps them without
+    # retracing.
     data_sh = {
         "feats": sp.feats, "halo_feats": sp.halo_feats,
         "labels": sp.labels.astype(np.int32),
         "train_mask": sp.train_mask, "val_mask": sp.val_mask,
         "test_mask": sp.test_mask,
         "adj": adj_leaves,
-        "un": tier_arrays(xplan.uncached),
-        "loc": tier_arrays(xplan.local),
-        "gl": {"send_row": xplan.glob.send_row,
-               "read_pos": xplan.glob.read_pos,
-               "read_buf_idx": xplan.glob.read_buf_idx,
-               "read_valid": xplan.glob.read_valid},
     }
     data_sh = jax.tree.map(jnp.asarray, data_sh)
-    # Replicated: the global buffer's per-unique-vertex source addressing.
-    data_rep = {"g_src_part": jnp.asarray(xplan.glob.src_part),
-                "g_src_slot": jnp.asarray(xplan.glob.src_slot)}
 
     caches_spec = {"local": P(names), "global": P()}
+    xarr_spec = {"sh": P(names), "rep": P()}
 
     def _quant(x):
         return x.astype(hdt) if hdt is not None else x
 
-    def _device_forward(params, caches, dsh, drep, use_stale: bool,
+    def _device_forward(params, caches, dsh, xr, xe, use_stale: bool,
                         defer_refresh: bool = False):
-        """Per-device forward. ``dsh`` leaves carry a leading dim of 1.
+        """Per-device forward. ``dsh``/``x*["sh"]`` leaves carry a leading
+        dim of 1.
+
+        ``xr`` is the installed (read) plan — stale cache consumption and
+        the per-step uncached exchange run on it; ``xe`` is the emit plan
+        whose tier rows the refresh pulls fetch.  They are the same arrays
+        except on a plan-transition step, where the refresh
+        prefetches the *next* plan's rows.
 
         ``defer_refresh`` (pipelined step, p2p transport): the local/global
         refresh pulls are issued as advance-able rings at their layer
@@ -267,23 +318,29 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                             tier["recv_src_slot"][0]].astype(h.dtype)
             return jnp.where(tier["recv_valid"][0][..., None], rows, 0.0)
 
-        def buf_ring(h):
-            return _BufRing(_quant(h[dsh["gl"]["send_row"][0]]), i_dev, p,
-                            names)
+        def buf_ring(xa, h):
+            return _BufRing(_quant(h[xa["sh"]["gl"]["send_row"][0]]), i_dev,
+                            p, names)
 
-        def buf_collect(acc, dtype):
-            return acc[drep["g_src_part"], drep["g_src_slot"]].astype(dtype)
+        def buf_collect(xa, acc, dtype):
+            rows = acc[xa["rep"]["g_src_part"],
+                       xa["rep"]["g_src_slot"]].astype(dtype)
+            return jnp.where(xa["rep"]["g_buf_valid"][:, None], rows, 0.0)
 
-        def build_global(h):
+        def build_global(xa, h):
             if p2p:
-                return buf_collect(buf_ring(h).finish(), h.dtype)
-            payload = _quant(h[dsh["gl"]["send_row"][0]])         # [SG, d]
+                return buf_collect(xa, buf_ring(xa, h).finish(), h.dtype)
+            payload = _quant(h[xa["sh"]["gl"]["send_row"][0]])    # [SG, d]
             gathered = jax.lax.all_gather(payload, names)         # [P, SG, d]
-            return buf_collect(gathered, h.dtype)
+            return buf_collect(xa, gathered, h.dtype)
 
         def scatter(halo, pos, rows, valid):
             pos_eff = jnp.where(valid, pos, nh)
             return halo.at[pos_eff].set(rows, mode="drop")
+
+        def read_global(gl, buf, halo):
+            return scatter(halo, gl["read_pos"][0],
+                           buf[gl["read_buf_idx"][0]], gl["read_valid"][0])
 
         h = feats
         fresh = {"local": [], "global": []}
@@ -294,30 +351,31 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             else:
                 d = h.shape[-1]
                 halo = jnp.zeros((nh, d), h.dtype)
-                halo = scatter(halo, dsh["un"]["recv_halo_pos"][0],
-                               pull(dsh["un"], h),
-                               dsh["un"]["recv_valid"][0])
+                un = xr["sh"]["un"]
+                halo = scatter(halo, un["recv_halo_pos"][0], pull(un, h),
+                               un["recv_valid"][0])
                 if defer_refresh and p2p:
-                    # issue this boundary's refresh rings; consume stale
-                    pending.append((h.dtype, peer_ring(dsh["loc"], h),
-                                    buf_ring(h)))
-                    loc_use = caches["local"][li - 1][0]
-                    buf_use = caches["global"][li - 1]
+                    # issue this boundary's refresh rings on the EMIT plan;
+                    # consume stale through the READ plan
+                    pending.append((h.dtype, peer_ring(xe["sh"]["loc"], h),
+                                    buf_ring(xe, h)))
+                    loc_use, loc_t = caches["local"][li - 1][0], xr["sh"]["loc"]
+                    buf_use, gl_t = caches["global"][li - 1], xr["sh"]["gl"]
                 else:
-                    loc_fresh = pull(dsh["loc"], h)
-                    buf_fresh = build_global(h)
-                    loc_use = (caches["local"][li - 1][0] if use_stale
-                               else loc_fresh)
-                    buf_use = (caches["global"][li - 1] if use_stale
-                               else buf_fresh)
+                    loc_fresh = pull(xe["sh"]["loc"], h)
+                    buf_fresh = build_global(xe, h)
+                    if use_stale:
+                        loc_use, loc_t = (caches["local"][li - 1][0],
+                                          xr["sh"]["loc"])
+                        buf_use, gl_t = caches["global"][li - 1], xr["sh"]["gl"]
+                    else:
+                        loc_use, loc_t = loc_fresh, xe["sh"]["loc"]
+                        buf_use, gl_t = buf_fresh, xe["sh"]["gl"]
                     fresh["local"].append(loc_fresh[None])
                     fresh["global"].append(buf_fresh)
-                halo = scatter(halo, dsh["loc"]["recv_halo_pos"][0], loc_use,
-                               dsh["loc"]["recv_valid"][0])
-                gl = dsh["gl"]
-                halo = scatter(halo, gl["read_pos"][0],
-                               buf_use[gl["read_buf_idx"][0]],
-                               gl["read_valid"][0])
+                halo = scatter(halo, loc_t["recv_halo_pos"][0], loc_use,
+                               loc_t["recv_valid"][0])
+                halo = read_global(gl_t, buf_use, halo)
             h_local = jnp.concatenate([h, halo], axis=0)
             h = _layer_apply(cfg, lp, adj, h_local, ni,
                              is_last=(li == layers - 1))
@@ -329,11 +387,11 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                 bring.advance()
         for dtype, lring, bring in pending:
             fresh["local"].append(
-                peer_collect(dsh["loc"], lring.finish(), dtype)[None])
-            fresh["global"].append(buf_collect(bring.finish(), dtype))
+                peer_collect(xe["sh"]["loc"], lring.finish(), dtype)[None])
+            fresh["global"].append(buf_collect(xe, bring.finish(), dtype))
         return h, fresh
 
-    def _device_loss(params, caches, dsh, drep, use_stale: bool,
+    def _device_loss(params, caches, dsh, xr, xe, use_stale: bool,
                      defer_refresh: bool):
         """This device's share of the global mean loss.  The cross-device
         ``psum`` stays OUTSIDE the differentiated function: under
@@ -342,8 +400,8 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         grads double-counts by a factor P (the oracle-parity suite pins
         this with an sgd step, where adam's scale-invariant first step
         cannot mask it)."""
-        logits, fresh = _device_forward(params, caches, dsh, drep, use_stale,
-                                        defer_refresh)
+        logits, fresh = _device_forward(params, caches, dsh, xr, xe,
+                                        use_stale, defer_refresh)
         labels = dsh["labels"][0]
         mask = dsh["train_mask"][0]
         logp = jax.nn.log_softmax(logits, -1)
@@ -352,9 +410,9 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
 
     def _make_step(use_stale: bool, emit_fresh: bool,
                    defer_refresh: bool = False):
-        def device_step(params, opt_state, caches, dsh, drep):
+        def device_step(params, opt_state, caches, dsh, xr, xe):
             (loss, (logits, fresh)), grads = jax.value_and_grad(
-                _device_loss, has_aux=True)(params, caches, dsh, drep,
+                _device_loss, has_aux=True)(params, caches, dsh, xr, xe,
                                             use_stale, defer_refresh)
             loss = jax.lax.psum(loss, names)
             grads = jax.lax.psum(grads, names)
@@ -365,39 +423,68 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             acc = jax.lax.psum(jnp.sum(correct * mask), names) / total_train
             metrics = {"loss": loss, "acc": acc}
             if emit_fresh:
-                drifts = [jnp.max(jnp.abs(a - b)) for a, b in
-                          zip(fresh["local"] + fresh["global"],
-                              caches["local"] + caches["global"])
+                pairs = list(zip(fresh["local"] + fresh["global"],
+                                 caches["local"] + caches["global"]))
+                drifts = [jnp.max(jnp.abs(a - b)) for a, b in pairs
                           if a.size]
                 local_max = (jnp.max(jnp.stack(drifts)) if drifts
                              else jnp.zeros(()))
                 metrics["drift"] = jax.lax.pmax(local_max, names)
+                n_ex = len(fresh["local"])
+                if n_ex:
+                    # per-row drift stats for the drift-aware planner
+                    metrics["drift_local_rows"] = jnp.max(jnp.stack(
+                        [jnp.max(jnp.abs(a - b), axis=-1)
+                         for a, b in pairs[:n_ex]]), axis=0)   # [1, Rloc]
+                    metrics["drift_global_rows"] = jax.lax.pmax(
+                        jnp.max(jnp.stack(
+                            [jnp.max(jnp.abs(a - b), axis=-1)
+                             for a, b in pairs[n_ex:]]), axis=0), names)
             out_caches = fresh if emit_fresh else caches
             return new_params, new_state, out_caches, metrics
 
+        mspec = {"loss": P(), "acc": P()}
+        if emit_fresh and layers > 1:
+            mspec.update(drift=P(), drift_local_rows=P(names),
+                         drift_global_rows=P())
+        elif emit_fresh:
+            mspec["drift"] = P()
         sm = shard_map(
             device_step, mesh=mesh,
-            in_specs=(P(), P(), caches_spec, P(names), P()),
-            out_specs=(P(), P(), caches_spec, P()),
+            in_specs=(P(), P(), caches_spec, P(names), xarr_spec, xarr_spec),
+            out_specs=(P(), P(), caches_spec, mspec),
             check_rep=False)
 
-        def step(params, opt_state, caches):
-            return sm(params, opt_state, caches, data_sh, data_rep)
-        # steady-state steps rewrite (params, opt_state, caches) in place
+        def step(params, opt_state, caches, xr, xe):
+            return sm(params, opt_state, caches, data_sh, xr, xe)
+        # steady-state steps rewrite (params, opt_state, caches) in place;
+        # the exchange arrays (xr, xe) are reused across steps, not donated
         return jax.jit(step, donate_argnums=(0, 1, 2) if donate else ())
 
-    def _device_fwd_fresh(params, caches, dsh, drep):
-        logits, _ = _device_forward(params, caches, dsh, drep, False)
+    def _device_fwd_fresh(params, caches, dsh, xr):
+        logits, _ = _device_forward(params, caches, dsh, xr, xr, False)
         return logits[None]
 
     sm_fwd = shard_map(_device_fwd_fresh, mesh=mesh,
-                       in_specs=(P(), caches_spec, P(names), P()),
+                       in_specs=(P(), caches_spec, P(names), xarr_spec),
                        out_specs=P(names), check_rep=False)
     caches0 = init_caches(cfg, xplan, p)
 
-    @jax.jit
+    jit_steps = {"refresh": _make_step(False, True),
+                 "cached": _make_step(True, False),
+                 "pipelined": _make_step(True, True, defer_refresh=p2p),
+                 "forward": jax.jit(
+                     lambda params, xa: sm_fwd(params, caches0, data_sh, xa))}
+    state = {"xarr": spmd_exchange_arrays(xplan, p2p=p2p)}
+
+    def wrap(name):
+        def stepper(params, opt_state, caches):
+            xa = state["xarr"]
+            return jit_steps[name](params, opt_state, caches, xa, xa)
+        return stepper
+
     def forward_fresh(params):
-        return sm_fwd(params, caches0, data_sh, data_rep)
+        return jit_steps["forward"](params, state["xarr"])
 
     labels_flat = jnp.asarray(sp.labels.astype(np.int32)).reshape(-1)
     masks_flat = {"train": jnp.asarray(sp.train_mask).reshape(-1),
@@ -416,9 +503,9 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
 
     return SpmdRuntime(cfg=cfg, xplan=xplan, mesh=mesh, axis_names=names,
                        comm_dims=comm_dims, forward_fresh=forward_fresh,
-                       step_refresh=_make_step(False, True),
-                       step_cached=_make_step(True, False),
-                       step_pipelined=_make_step(True, True,
-                                                 defer_refresh=True),
+                       step_refresh=wrap("refresh"),
+                       step_cached=wrap("cached"),
+                       step_pipelined=wrap("pipelined"),
                        evaluate=evaluate, caches0=caches0, backend=backend,
-                       transport=transport, halo_dtype_bytes=hd_bytes)
+                       transport=transport, halo_dtype_bytes=hd_bytes,
+                       jit_steps=jit_steps, _state=state)

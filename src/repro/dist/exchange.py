@@ -36,6 +36,17 @@ the same index sets —
 The global tier stays a deduplicated broadcast in both transports (it
 emulates the paper's CPU-shared cache: each unique row is *originated*
 once by its owner and circulated on the ring).
+
+**Slot stability** (online cache adaptation): by default every tier array
+is padded to the *current plan's* per-partition maxima, so re-ranking the
+tiers produces arrays of different shapes and the jitted runtimes would
+retrace.  Passing ``pad_to=exchange_capacity(ps, capacity)`` instead pads
+every tier to a *capacity* width that upper-bounds ANY plan the
+partitioning + cache capacity admits — tier membership then lives purely
+in the index data + valid masks, and a re-ranked plan (same ``ps``, same
+``CacheCapacity``) drops into an already-compiled step function without
+retracing.  That is the contract the adaptive runtimes
+(``SimRuntime.set_plan`` / ``step_transition``) rely on.
 """
 from __future__ import annotations
 
@@ -48,7 +59,64 @@ from repro.data.gnn_data import FullBatchTask
 from repro.graph.partition import PartitionSet
 
 __all__ = ["ExchangeTier", "GlobalTier", "ExchangePlan", "StackedParts",
-           "StackedEllPack", "build_exchange_plan", "stack_partitions"]
+           "StackedEllPack", "ExchangeCapacity", "exchange_capacity",
+           "build_exchange_plan", "stack_partitions"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeCapacity:
+    """Fixed per-tier padded widths that upper-bound any cache plan over a
+    given (partitioning, CacheCapacity) pair.
+
+    Padding a compiled :class:`ExchangePlan` to these widths makes its
+    array *shapes* a function of the capacities only — tier membership
+    becomes data (indices + valid masks), so online re-planning never
+    changes shapes and never retraces a jitted step.
+    """
+    un_recv: int     # uncached recv rows per consumer (<= its halo size)
+    loc_recv: int    # local-tier recv rows per consumer (<= min(c_gpu, halo))
+    glob_read: int   # global-tier reads per consumer (<= min(halo, c_cpu))
+    send: int        # dedup send rows per owner, uncached/local tiers
+    glob_send: int   # dedup send rows per owner into the global buffer
+    peer: int        # per-(owner, peer) packed block width
+    glob_buf: int    # unique rows resident in the global buffer (<= c_cpu)
+
+
+def exchange_capacity(ps: PartitionSet, capacity) -> ExchangeCapacity:
+    """Worst-case tier widths over ANY plan ``build_cache_plan``-shaped
+    tiering can produce for ``ps`` under ``capacity``
+    (:class:`repro.core.jaca.CacheCapacity`).
+
+    - a consumer's local tier holds at most ``min(c_gpu, n_halo)`` rows,
+      its global tier at most ``min(n_halo, c_cpu)``, its uncached tier at
+      most ``n_halo`` (empty caches);
+    - an owner's deduplicated send buffer holds at most the number of its
+      inner vertices that appear in *any* partition's halo;
+    - block (owner -> peer) holds at most ``|halo(peer) ∩ inner(owner)|``
+      rows — a plan property of the partitioning, not of the tiering.
+    """
+    p = ps.num_parts
+    h_sizes = [pt.n_halo for pt in ps.parts]
+    union = ps.halo_union()
+    owner = ps.assign
+    exportable = np.bincount(owner[union], minlength=p) if union.size \
+        else np.zeros(p, np.int64)
+    c_cpu = int(min(capacity.c_cpu, union.size))
+    peer = 0
+    for pt in ps.parts:
+        if pt.n_halo:
+            peer = max(peer, int(np.bincount(owner[pt.halo_nodes],
+                                             minlength=p).max()))
+    return ExchangeCapacity(
+        un_recv=max(h_sizes, default=0),
+        loc_recv=max((min(int(cg), hs) for cg, hs in
+                      zip(capacity.c_gpu, h_sizes)), default=0),
+        glob_read=max((min(hs, c_cpu) for hs in h_sizes), default=0),
+        send=int(exportable.max()) if union.size else 0,
+        glob_send=int(min(int(exportable.max()) if union.size else 0,
+                          c_cpu)),
+        peer=peer,
+        glob_buf=c_cpu)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,7 +167,13 @@ class ExchangeTier:
 
 @dataclasses.dataclass(frozen=True)
 class GlobalTier:
-    """The shared global cache: one buffer row per unique consumed vertex."""
+    """The shared global cache: one buffer row per unique consumed vertex.
+
+    Under a capacity-padded plan the buffer itself is padded too:
+    ``buf_valid`` marks the real rows (always the leading slots — buffer
+    rows are sorted by gid), so ``buf_size`` (array shape) is
+    plan-invariant while ``n_unique`` (accounting) tracks the membership.
+    """
     send_row: np.ndarray       # [P, S] inner rows owners contribute
     send_valid: np.ndarray     # [P, S] bool
     src_part: np.ndarray       # [G] owner partition per buffer row
@@ -107,10 +181,21 @@ class GlobalTier:
     read_pos: np.ndarray       # [P, RG] halo positions served from the buffer
     read_buf_idx: np.ndarray   # [P, RG] buffer row per read
     read_valid: np.ndarray     # [P, RG] bool
+    buf_valid: np.ndarray | None = None   # [G] bool (None => all real)
+
+    def __post_init__(self):
+        if self.buf_valid is None:
+            object.__setattr__(self, "buf_valid",
+                               np.ones(self.src_part.shape[0], bool))
 
     @property
     def n_unique(self) -> int:
         """Unique vertices resident in (and read from) the global buffer."""
+        return int(self.buf_valid.sum())
+
+    @property
+    def buf_size(self) -> int:
+        """Padded buffer row count (the runtime cache allocation)."""
         return int(self.src_part.shape[0])
 
 
@@ -188,11 +273,16 @@ class ExchangePlan:
         return out
 
 
-def _pad2(rows: list[np.ndarray], fill: int, dtype=np.int32
-          ) -> tuple[np.ndarray, np.ndarray]:
-    """Stack ragged int rows into [P, max] + validity mask."""
+def _pad2(rows: list[np.ndarray], fill: int, dtype=np.int32,
+          width: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """Stack ragged int rows into [P, width] + validity mask (``width``
+    defaults to the ragged maximum; an explicit capacity must cover it)."""
     p = len(rows)
-    width = max((r.shape[0] for r in rows), default=0)
+    natural = max((r.shape[0] for r in rows), default=0)
+    if width is None:
+        width = natural
+    elif width < natural:
+        raise ValueError(f"pad width {width} < ragged maximum {natural}")
     out = np.full((p, width), fill, dtype=dtype)
     valid = np.zeros((p, width), dtype=bool)
     for i, r in enumerate(rows):
@@ -225,7 +315,8 @@ def _owner_slots(op_all: np.ndarray, orow_all: np.ndarray, num_parts: int
 
 
 def _peer_blocks(gids_per_part: list[np.ndarray], owner_part: np.ndarray,
-                 owner_row: np.ndarray, num_parts: int
+                 owner_row: np.ndarray, num_parts: int,
+                 width: int | None = None
                  ) -> tuple[np.ndarray, np.ndarray, list[np.ndarray]]:
     """Per-destination packed send blocks, vectorized.
 
@@ -240,7 +331,8 @@ def _peer_blocks(gids_per_part: list[np.ndarray], owner_part: np.ndarray,
     counts = [g.size for g in gids_per_part]
     total = sum(counts)
     if total == 0:
-        return (np.zeros((p, p, 0), np.int32), np.zeros((p, p, 0), bool),
+        w0 = width or 0
+        return (np.zeros((p, p, w0), np.int32), np.zeros((p, p, w0), bool),
                 [np.zeros(0, np.int64) for _ in range(p)])
     gids_all = np.concatenate(gids_per_part)
     cons_all = np.repeat(np.arange(p), counts)
@@ -254,7 +346,11 @@ def _peer_blocks(gids_per_part: list[np.ndarray], owner_part: np.ndarray,
     slot_s = np.arange(total) - first[pair_s]        # slot within block
     slot = np.empty(total, np.int64)
     slot[order] = slot_s
-    width = int(np.bincount(pair, minlength=p * p).max())
+    natural = int(np.bincount(pair, minlength=p * p).max())
+    if width is None:
+        width = natural
+    elif width < natural:
+        raise ValueError(f"peer pad width {width} < block maximum {natural}")
     peer_row = np.zeros((p * p, width), np.int32)
     peer_valid = np.zeros((p * p, width), dtype=bool)
     peer_row[pair_s, slot_s] = orow_all[order]
@@ -265,8 +361,16 @@ def _peer_blocks(gids_per_part: list[np.ndarray], owner_part: np.ndarray,
             slots_per_part)
 
 
-def build_exchange_plan(ps: PartitionSet, plan: CachePlan) -> ExchangePlan:
-    """Compile ``plan``'s tiering into static gather/scatter index sets."""
+def build_exchange_plan(ps: PartitionSet, plan: CachePlan,
+                        pad_to: ExchangeCapacity | None = None
+                        ) -> ExchangePlan:
+    """Compile ``plan``'s tiering into static gather/scatter index sets.
+
+    ``pad_to`` (from :func:`exchange_capacity`) pads every tier array to
+    capacity widths instead of this plan's maxima — any two plans compiled
+    with the same ``pad_to`` have byte-identical shapes (the slot-stable
+    layout online re-planning needs to avoid retracing jitted steps).
+    """
     p = ps.num_parts
     n = ps.graph.num_nodes
     owner_row = np.full(n, -1, np.int64)
@@ -275,7 +379,9 @@ def build_exchange_plan(ps: PartitionSet, plan: CachePlan) -> ExchangePlan:
     owner_part = ps.assign.astype(np.int64)
 
     def build_tier(name: str, gids_per_part: list[np.ndarray],
-                   pos_per_part: list[np.ndarray]) -> ExchangeTier:
+                   pos_per_part: list[np.ndarray],
+                   recv_w: int | None, send_w: int | None,
+                   peer_w: int | None) -> ExchangeTier:
         counts = [g.size for g in gids_per_part]
         gids_all = (np.concatenate(gids_per_part) if sum(counts)
                     else np.zeros(0, np.int64))
@@ -286,15 +392,18 @@ def build_exchange_plan(ps: PartitionSet, plan: CachePlan) -> ExchangePlan:
         src_slots = [slots_all[offsets[i]: offsets[i + 1]].astype(np.int32)
                      for i in range(p)]
         send_row, send_valid = _pad2([r.astype(np.int32)
-                                      for r in send_rows], fill=0)
-        recv_src_part, recv_valid = _pad2(src_parts, fill=0)
-        recv_src_slot, _ = _pad2(src_slots, fill=0)
+                                      for r in send_rows], fill=0,
+                                     width=send_w)
+        recv_src_part, recv_valid = _pad2(src_parts, fill=0, width=recv_w)
+        recv_src_slot, _ = _pad2(src_slots, fill=0, width=recv_w)
         recv_halo_pos, _ = _pad2([np.asarray(q, np.int32)
-                                  for q in pos_per_part], fill=0)
+                                  for q in pos_per_part], fill=0,
+                                 width=recv_w)
         peer_row, peer_valid, peer_slots = _peer_blocks(
-            gids_per_part, owner_part, owner_row, p)
+            gids_per_part, owner_part, owner_row, p, width=peer_w)
         recv_peer_slot, _ = _pad2([s.astype(np.int32)
-                                   for s in peer_slots], fill=0)
+                                   for s in peer_slots], fill=0,
+                                  width=recv_w)
         return ExchangeTier(name=name, send_row=send_row,
                             send_valid=send_valid,
                             recv_src_part=recv_src_part,
@@ -305,12 +414,19 @@ def build_exchange_plan(ps: PartitionSet, plan: CachePlan) -> ExchangePlan:
                             peer_send_valid=peer_valid,
                             recv_peer_slot=recv_peer_slot)
 
+    pt = pad_to
     uncached = build_tier("uncached",
                           [w.uncached_gids for w in plan.workers],
-                          [w.uncached_pos for w in plan.workers])
+                          [w.uncached_pos for w in plan.workers],
+                          recv_w=pt.un_recv if pt else None,
+                          send_w=pt.send if pt else None,
+                          peer_w=pt.peer if pt else None)
     local = build_tier("local",
                        [w.local_gids for w in plan.workers],
-                       [w.local_pos for w in plan.workers])
+                       [w.local_pos for w in plan.workers],
+                       recv_w=pt.loc_recv if pt else None,
+                       send_w=pt.send if pt else None,
+                       peer_w=pt.peer if pt else None)
 
     # Global tier: unique over the gids any worker actually reads (resident
     # rows no one consumes are never refreshed, so they cost nothing).
@@ -323,17 +439,31 @@ def build_exchange_plan(ps: PartitionSet, plan: CachePlan) -> ExchangePlan:
     g_src_part = owner_part[used].astype(np.int32)
     g_src_slot = g_slots.astype(np.int32)
     g_send_row, g_send_valid = _pad2([r.astype(np.int32)
-                                      for r in g_send_rows], fill=0)
+                                      for r in g_send_rows], fill=0,
+                                     width=pt.glob_send if pt else None)
+    # pad the buffer itself: real rows occupy the leading slots
+    buf = pt.glob_buf if pt else used.size
+    if buf < used.size:
+        raise ValueError(f"global buffer capacity {buf} < plan's "
+                         f"{used.size} unique consumed vertices")
+    buf_valid = np.zeros(buf, bool)
+    buf_valid[: used.size] = True
+    g_src_part = np.concatenate(
+        [g_src_part, np.zeros(buf - used.size, np.int32)])
+    g_src_slot = np.concatenate(
+        [g_src_slot, np.zeros(buf - used.size, np.int32)])
     # `used` is sorted, so buffer indices come straight from searchsorted
     read_buf_idx, read_valid = _pad2(
         [np.searchsorted(used, w.global_gids).astype(np.int32)
-         for w in plan.workers], fill=0)
+         for w in plan.workers], fill=0,
+        width=pt.glob_read if pt else None)
     read_pos, _ = _pad2([w.global_pos.astype(np.int32)
-                         for w in plan.workers], fill=0)
+                         for w in plan.workers], fill=0,
+                        width=pt.glob_read if pt else None)
     glob = GlobalTier(send_row=g_send_row, send_valid=g_send_valid,
                       src_part=g_src_part, src_slot=g_src_slot,
                       read_pos=read_pos, read_buf_idx=read_buf_idx,
-                      read_valid=read_valid)
+                      read_valid=read_valid, buf_valid=buf_valid)
 
     return ExchangePlan(num_parts=p, uncached=uncached, local=local,
                         glob=glob, refresh_every=plan.refresh_every,

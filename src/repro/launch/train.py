@@ -24,7 +24,8 @@ def run_gnn(args) -> dict:
     import jax
     from repro.core import (PROFILES, PAPER_GROUPS, make_group, cal_capacity,
                             build_cache_plan, do_partition, RapaConfig,
-                            CacheCapacity, StalenessController)
+                            CacheCapacity, StalenessController,
+                            AdaptivePlanner)
     from repro.data import make_task
     from repro.dist import (build_exchange_plan, stack_partitions,
                             make_sim_runtime, train_capgnn)
@@ -54,8 +55,18 @@ def run_gnn(args) -> dict:
                            m_cpu_gib=args.cpu_cache_gib)
     else:
         cap = CacheCapacity(c_gpu=[0] * p, c_cpu=0)
-    plan = build_cache_plan(ps, cap, refresh_every=args.refresh_every)
-    xplan = build_exchange_plan(ps, plan)
+    cache_policy = getattr(args, "cache_policy", "static")
+    planner = None
+    if cache_policy != "static":
+        # online adaptation: the planner owns the initial plan AND the
+        # slot-stable capacity padding, so the runtime's installed plan and
+        # the planner's hit/drift accounting can never desync
+        planner = AdaptivePlanner(ps, cap, refresh_every=args.refresh_every,
+                                  policy=cache_policy, seed=args.seed)
+        xplan = planner.exchange_plan()
+    else:
+        plan = build_cache_plan(ps, cap, refresh_every=args.refresh_every)
+        xplan = build_exchange_plan(ps, plan)
     sp = stack_partitions(ps, task, backend=args.backend)
     opt = adam(args.lr)
     halo_dtype = getattr(args, "halo_dtype", "f32")
@@ -64,7 +75,8 @@ def run_gnn(args) -> dict:
                                backend=args.backend,
                                halo_dtype=halo_dtype)
     ctl = StalenessController(refresh_every=args.refresh_every,
-                             adaptive=args.adaptive_staleness)
+                              adaptive=args.adaptive_staleness,
+                              replan_every=getattr(args, "replan_every", 1))
 
     # --resume: restore (params, opt_state, epoch) and run the remaining
     # epochs; --epochs is the *total* budget across runs.
@@ -83,13 +95,17 @@ def run_gnn(args) -> dict:
     params, report = train_capgnn(cfg, runtime, xplan, p, opt,
                                   epochs=run_epochs, controller=ctl,
                                   pipeline=args.pipeline, seed=args.seed,
-                                  params0=params0, opt_state0=opt_state0)
+                                  params0=params0, opt_state0=opt_state0,
+                                  planner=planner)
     _, test_acc = runtime.evaluate(params, "test")
     out = {
         "dataset": args.dataset, "model": args.model, "parts": p,
         "epochs": args.epochs, "resumed_from": start_epoch,
         "final_loss": report.losses[-1] if report.losses else None,
         "halo_dtype": halo_dtype,
+        "cache_policy": cache_policy,
+        "replan_events": report.replan_events,
+        "planner_hit_rate": report.hit_rate,
         "test_acc": test_acc, "comm_bytes": report.comm_bytes,
         "comm_reduction_vs_vanilla": report.comm_reduction,
         "refresh_steps": report.refresh_steps,
@@ -189,6 +205,13 @@ def main():
     g.add_argument("--pipeline", action="store_true", default=True)
     g.add_argument("--no-pipeline", dest="pipeline", action="store_false")
     g.add_argument("--refresh-every", type=int, default=4)
+    g.add_argument("--cache-policy", default="static",
+                   choices=["static", "overlap", "lru", "fifo", "drift"],
+                   help="online cache adaptation: 'static' freezes the "
+                        "JACA overlap plan; the others re-rank tiers at "
+                        "refresh boundaries (slot-stable swap, no retrace)")
+    g.add_argument("--replan-every", type=int, default=1,
+                   help="re-rank every k-th refresh (adaptive policies)")
     g.add_argument("--adaptive-staleness", action="store_true")
     g.add_argument("--cpu-cache-gib", type=float, default=4.0)
     g.add_argument("--seed", type=int, default=0)

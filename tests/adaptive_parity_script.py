@@ -1,0 +1,137 @@
+"""Subprocess helper for test_adaptive: online cache adaptation on the
+SPMD runtime over forced host devices.  Checks, per transport:
+
+- an adaptive run whose re-plans preserve membership (slot-stable padded
+  layout, 'overlap' re-ranks on a static graph) matches the frozen static
+  runtime's losses and params to <= 1e-5, with ``step_transition`` taking
+  the place of the static run's pipelined refresh;
+- a membership-churning re-plan (random re-ranked plan) executes through
+  ``step_transition`` + subsequent cached steps with finite loss, exact
+  plan-counted == valid-mask row accounting, and **zero retraces**: every
+  jitted step flavour reports a compiled-call cache of size <= 1 at exit.
+
+Invoked as:  python tests/adaptive_parity_script.py
+                 [--transport p2p|allgather]
+Exits non-zero on any mismatch.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+TOL = 1e-5
+
+
+def main():
+    transport = (sys.argv[sys.argv.index("--transport") + 1]
+                 if "--transport" in sys.argv else "p2p")
+    from repro.core import (AdaptivePlanner, CacheCapacity,
+                            build_cache_plan)
+    from repro.data.gnn_data import FullBatchTask, split_masks
+    from repro.dist import (build_exchange_plan, exchange_capacity,
+                            init_caches, stack_partitions)
+    from repro.dist.capgnn_spmd import make_spmd_runtime
+    from repro.graph import (build_partition, metis_partition, rmat,
+                             symmetric_normalize, synth_features)
+    from repro.models.gnn import GNNConfig, init_gnn
+    from repro.optim import sgd
+
+    parts = 4
+    g = rmat(300, 1800, seed=11)
+    feats, labels = synth_features(g, 12, 5, seed=11)
+    gn = symmetric_normalize(g)
+    tr, va, te = split_masks(g.num_nodes, seed=11)
+    task = FullBatchTask(graph=gn, features=feats, labels=labels,
+                         train_mask=tr, val_mask=va, test_mask=te,
+                         num_classes=5)
+    ps = build_partition(gn, metis_partition(gn, parts, seed=11), hops=1)
+    cfg = GNNConfig(model="gcn", in_dim=12, hidden_dim=16, out_dim=5,
+                    num_layers=3)
+    max_halo = max(pt.n_halo for pt in ps.parts)
+    cap = CacheCapacity(c_gpu=[max(1, max_halo // 3)] * parts,
+                        c_cpu=max(1, ps.halo_union().size // 4))
+    plan = build_cache_plan(ps, cap, refresh_every=2)
+    pad = exchange_capacity(ps, cap)
+    sp = stack_partitions(ps, task)
+    opt = sgd(1.0)   # update == -grad: parity below IS gradient parity
+    mesh = jax.make_mesh((parts,), ("data",))
+
+    def make(xp):
+        return make_spmd_runtime(cfg, sp, xp, opt, mesh, axis="data",
+                                 transport=transport, donate=False)
+
+    params0 = init_gnn(jax.random.PRNGKey(3), cfg)
+
+    # ---- static reference: refresh, cached, pipelined-refresh, cached
+    rt_s = make(build_exchange_plan(ps, plan))
+    p, o, c = params0, opt.init(params0), init_caches(cfg, rt_s.xplan, parts)
+    losses_s = []
+    for fn in (rt_s.step_refresh, rt_s.step_cached, rt_s.step_pipelined,
+               rt_s.step_cached):
+        p, o, c, m = fn(p, o, c)
+        losses_s.append(float(m["loss"]))
+    p_static = p
+
+    # ---- adaptive with membership-preserving re-plan at the same step
+    planner = AdaptivePlanner(ps, cap, refresh_every=2, policy="overlap")
+    rt = make(planner.exchange_plan(plan))
+    p, o, c = params0, opt.init(params0), init_caches(cfg, rt.xplan, parts)
+    losses_a = []
+    p, o, c, m = rt.step_refresh(p, o, c)
+    losses_a.append(float(m["loss"]))
+    p, o, c, m = rt.step_cached(p, o, c)
+    losses_a.append(float(m["loss"]))
+    planner.observe_step(layers=2)
+    x_next = planner.exchange_plan(planner.replan())   # same membership
+    p, o, c, m = rt.step_transition(p, o, c, x_next)
+    losses_a.append(float(m["loss"]))
+    p, o, c, m = rt.step_cached(p, o, c)
+    losses_a.append(float(m["loss"]))
+    np.testing.assert_allclose(losses_a, losses_s, rtol=TOL, atol=TOL)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p_static)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=TOL, atol=TOL)
+
+    # ---- membership-churning re-plan: rows exact, loss finite, no retrace
+    rng = np.random.default_rng(5)
+    from repro.core import plan_from_membership
+    local_sets = []
+    for i, pt in enumerate(ps.parts):
+        k = min(cap.c_gpu[i], pt.n_halo)
+        sel = rng.choice(pt.halo_nodes, size=k, replace=False)
+        local_sets.append(set(int(v) for v in sel))
+    union = ps.halo_union()
+    glob = set(int(v) for v in rng.choice(
+        union, size=min(cap.c_cpu, union.size), replace=False))
+    churned = plan_from_membership(ps, local_sets, glob, cap,
+                                   refresh_every=2)
+    x_read = rt.xplan
+    x_next = build_exchange_plan(ps, churned, pad_to=pad)
+    xr_arr = rt._state["xarr"]
+    p, o, c, m = rt.step_transition(p, o, c, x_next)
+    xe_arr = rt._state["xarr"]
+    assert np.isfinite(float(m["loss"]))
+    plan_rows = (x_read.uncached.n_rows + x_next.local.n_rows
+                 + x_next.glob.n_unique)
+    measured = (int(np.asarray(xr_arr["sh"]["un"]["recv_valid"]).sum())
+                + int(np.asarray(xe_arr["sh"]["loc"]["recv_valid"]).sum())
+                + int(np.asarray(xe_arr["rep"]["g_buf_valid"]).sum()))
+    assert plan_rows == measured, (plan_rows, measured)
+    p, o, c, m = rt.step_cached(p, o, c)   # consume the prefetched caches
+    assert np.isfinite(float(m["loss"]))
+
+    # ---- zero retraces across every re-plan event above
+    sizes = {k: rt.jit_steps[k]._cache_size()
+             for k in ("refresh", "cached", "pipelined")}
+    assert all(v <= 1 for v in sizes.values()), sizes
+
+    print(f"OK transport={transport} losses={losses_a} "
+          f"jit_cache_sizes={sizes} rows={plan_rows}")
+
+
+if __name__ == "__main__":
+    main()

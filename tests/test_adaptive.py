@@ -1,0 +1,383 @@
+"""Online cache adaptation suite.
+
+Three layers of coverage:
+
+- **slot-stable layout properties** (randomized membership churn): every
+  capacity-padded exchange plan over the same (partitioning, capacity)
+  pair has identical array shapes, and each one individually preserves
+  the exchange invariants — every consumed gid in exactly one tier and
+  exactly one peer block, valid-mask row counts equal to the plan's tier
+  sizes, scatter positions in range, and exact halo reconstruction;
+- **live eviction == trace simulator**: an :class:`AdaptivePlanner`
+  configured as a single shared cache reproduces
+  ``simulate_policy_hit_rate``'s FIFO/LRU hit sequence exactly on the
+  same epoch stream;
+- **no-retrace + parity**: the jitted sim steps keep a compiled-call
+  cache of size 1 across re-plan events (plan swap is data, not shape),
+  an adaptive run with a membership-preserving policy matches the frozen
+  static runtime's numerics, and the byte accounting stays exact
+  (plan-counted rows == valid-mask rows of the consumed arrays) across
+  transitions.  The SPMD equivalent runs in a subprocess on forced host
+  devices (``adaptive_parity_script.py``) for both transports.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdaptivePlanner, CacheCapacity, StalenessController,
+                        build_cache_plan, plan_from_membership,
+                        simulate_policy_hit_rate)
+from repro.dist import build_exchange_plan, exchange_capacity
+from repro.graph import build_partition, rmat
+from repro.graph.partition import random_partition
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "adaptive_parity_script.py")
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _ps(n, m, parts, seed):
+    g = rmat(n, m, seed=seed)
+    assign = random_partition(g, parts, seed=seed)
+    for p in range(parts):       # every part non-empty
+        assign[p % n] = p
+    return build_partition(g, assign, hops=1)
+
+
+def _random_membership(ps, cap, rng):
+    """Arbitrary capacity-respecting tier membership (worst-case churn —
+    no policy structure at all)."""
+    local_sets = []
+    for i, pt in enumerate(ps.parts):
+        hi = min(cap.c_gpu[i], pt.n_halo)
+        k = int(rng.integers(0, hi + 1))
+        sel = rng.choice(pt.halo_nodes, size=k, replace=False) if k else []
+        local_sets.append(set(int(v) for v in sel))
+    union = ps.halo_union()
+    kc = int(rng.integers(0, min(cap.c_cpu, union.size) + 1))
+    glob = (set(int(v) for v in rng.choice(union, size=kc, replace=False))
+            if kc else set())
+    return local_sets, glob
+
+
+def _check_invariants(ps, plan, xplan):
+    """The exchange invariants a re-ranked plan must preserve."""
+    parts = ps.num_parts
+    tiers = {"uncached": ([w.uncached_gids for w in plan.workers],
+                          xplan.uncached),
+             "local": ([w.local_gids for w in plan.workers], xplan.local)}
+    for name, (gids_per_part, t) in tiers.items():
+        # valid-mask rows == plan rows
+        want_rows = sum(g.size for g in gids_per_part)
+        assert int(t.recv_valid.sum()) == want_rows, name
+        assert t.n_peer_rows == want_rows, name
+        for q in range(parts):
+            got = []
+            for o in range(parts):
+                block = t.peer_send_row[o][q][t.peer_send_valid[o][q]]
+                gid = ps.parts[o].inner_nodes[block]
+                got.append(gid)
+                assert np.all(ps.assign[gid] == o)
+            got = np.concatenate(got) if got else np.zeros(0, np.int64)
+            want = np.asarray(gids_per_part[q])
+            # every consumed gid in exactly one peer block, exactly once
+            assert np.array_equal(np.sort(got), np.sort(want))
+            assert np.unique(got).size == got.size
+            # scatter positions in range and valid-masked
+            nh = ps.parts[q].n_halo
+            v = t.recv_valid[q]
+            assert np.all(t.recv_halo_pos[q][v] < max(nh, 1))
+    # the three tiers partition each worker's halo positions
+    for w, part in zip(plan.workers, ps.parts):
+        pos = np.concatenate([w.local_pos, w.global_pos, w.uncached_pos])
+        assert np.array_equal(np.sort(pos), np.arange(part.n_halo))
+    # global buffer: one valid row per unique consumed gid, reads in range
+    used = [w.global_gids for w in plan.workers if w.global_gids.size]
+    n_used = int(np.unique(np.concatenate(used)).size) if used else 0
+    g = xplan.glob
+    assert g.n_unique == n_used
+    assert int(g.read_valid.sum()) == sum(w.global_pos.size
+                                          for w in plan.workers)
+    for q in range(parts):
+        v = g.read_valid[q]
+        assert np.all(g.read_buf_idx[q][v] < max(g.buf_size, 1))
+        if v.any():
+            assert bool(g.buf_valid[g.read_buf_idx[q][v]].all())
+        assert np.all(g.read_pos[q][v] < max(ps.parts[q].n_halo, 1))
+
+
+@st.composite
+def churn_case(draw):
+    n = draw(st.integers(20, 70))
+    m = draw(st.integers(n, 5 * n))
+    parts = draw(st.integers(2, 4))
+    seed = draw(st.integers(0, 2 ** 16))
+    c_gpu = draw(st.integers(0, 25))
+    c_cpu = draw(st.integers(0, 25))
+    return n, m, parts, seed, c_gpu, c_cpu
+
+
+@given(churn_case())
+@settings(max_examples=25, deadline=None)
+def test_slot_stable_replanning_preserves_invariants(case):
+    """Randomized membership churn: shapes frozen, invariants intact."""
+    n, m, parts, seed, c_gpu, c_cpu = case
+    ps = _ps(n, m, parts, seed)
+    cap = CacheCapacity(c_gpu=[c_gpu] * parts, c_cpu=c_cpu)
+    pad = exchange_capacity(ps, cap)
+    rng = np.random.default_rng(seed)
+    ref_shapes = None
+    plans = [build_cache_plan(ps, cap, refresh_every=2)]
+    for _ in range(3):
+        loc, glob = _random_membership(ps, cap, rng)
+        plans.append(plan_from_membership(ps, loc, glob, cap,
+                                          refresh_every=2))
+    for plan in plans:
+        xplan = build_exchange_plan(ps, plan, pad_to=pad)
+        shapes = tuple(a.shape for a in (
+            xplan.uncached.send_row, xplan.uncached.recv_valid,
+            xplan.uncached.peer_send_row, xplan.local.send_row,
+            xplan.local.recv_valid, xplan.local.peer_send_row,
+            xplan.glob.send_row, xplan.glob.src_part, xplan.glob.read_pos))
+        if ref_shapes is None:
+            ref_shapes = shapes
+        assert shapes == ref_shapes     # slot stability: shapes are data-free
+        _check_invariants(ps, plan, xplan)
+
+
+@given(churn_case())
+@settings(max_examples=15, deadline=None)
+def test_padded_exchange_reconstructs_halo_exactly(case):
+    """A capacity-padded, randomly re-ranked plan still reconstructs the
+    exact halo feature matrix (padding rows never leak)."""
+    import jax.numpy as jnp
+    from repro.dist.capgnn_sim import (_build_global, _glob_dict, _pull,
+                                       _read_global, _scatter, _tier_dict)
+    n, m, parts, seed, c_gpu, c_cpu = case
+    ps = _ps(n, m, parts, seed)
+    cap = CacheCapacity(c_gpu=[c_gpu] * parts, c_cpu=c_cpu)
+    rng = np.random.default_rng(seed + 1)
+    loc, glob_set = _random_membership(ps, cap, rng)
+    plan = plan_from_membership(ps, loc, glob_set, cap, refresh_every=1)
+    xplan = build_exchange_plan(ps, plan, pad_to=exchange_capacity(ps, cap))
+
+    d = 3
+    feats = rng.normal(size=(ps.graph.num_nodes, d)).astype(np.float32)
+    ni = max(pt.n_inner for pt in ps.parts)
+    nh = max(max(pt.n_halo for pt in ps.parts), 1)
+    h = np.zeros((parts, ni, d), np.float32)
+    for i, pt in enumerate(ps.parts):
+        h[i, :pt.n_inner] = feats[pt.inner_nodes]
+    hj = jnp.asarray(h)
+    un = _tier_dict(xplan.uncached)
+    loc_d = _tier_dict(xplan.local)
+    gl = _glob_dict(xplan.glob)
+    halo = jnp.zeros((parts, nh, d))
+    halo = _scatter(halo, un["recv_halo_pos"], _pull(un, hj),
+                    un["recv_valid"])
+    halo = _scatter(halo, loc_d["recv_halo_pos"], _pull(loc_d, hj),
+                    loc_d["recv_valid"])
+    halo = _read_global(gl, _build_global(gl, hj), halo)
+    halo = np.asarray(halo)
+    for i, pt in enumerate(ps.parts):
+        np.testing.assert_allclose(halo[i, :pt.n_halo],
+                                   feats[pt.halo_nodes],
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------- live eviction == simulator
+
+@pytest.mark.parametrize("policy", ["fifo", "lru"])
+@pytest.mark.parametrize("cap_frac", [0.3, 0.6, 0.9])
+def test_live_eviction_matches_trace_simulator(policy, cap_frac):
+    """Planner as a single shared cache (local tiers disabled) reproduces
+    the trace simulator's hit sequence exactly on the epoch stream."""
+    ps = _ps(80, 400, 3, seed=4)
+    k = max(1, int(cap_frac * ps.halo_union().size))
+    layers, epochs = 3, 4
+    pl = AdaptivePlanner(ps, CacheCapacity(c_gpu=[0] * 3, c_cpu=k),
+                         policy=policy)
+    for _ in range(epochs):
+        pl.observe_step(layers=layers)
+    want = simulate_policy_hit_rate(ps, k, policy, layers=layers,
+                                    epochs=epochs)
+    assert pl.hit_rate() == pytest.approx(want, abs=1e-12)
+
+
+def test_planner_replan_respects_capacities_and_partitions_halo():
+    ps = _ps(80, 400, 3, seed=5)
+    cap = CacheCapacity(c_gpu=[6, 3, 9], c_cpu=11)
+    for policy in ("lru", "fifo", "drift", "overlap"):
+        pl = AdaptivePlanner(ps, cap, policy=policy)
+        for _ in range(3):
+            pl.observe_step(layers=2)
+        plan = pl.replan()
+        for i, (w, part) in enumerate(zip(plan.workers, ps.parts)):
+            assert w.local_pos.size <= cap.c_gpu[i]
+            pos = np.concatenate([w.local_pos, w.global_pos,
+                                  w.uncached_pos])
+            assert np.array_equal(np.sort(pos), np.arange(part.n_halo))
+        assert plan.global_gids.size <= cap.c_cpu
+        # padded exchange plans share one shape signature
+        xa, xb = pl.exchange_plan(plan), pl.exchange_plan(pl._initial)
+        assert xa.uncached.recv_valid.shape == xb.uncached.recv_valid.shape
+        assert xa.glob.src_part.shape == xb.glob.src_part.shape
+
+
+def test_staleness_controller_replan_schedule():
+    ctl = StalenessController(refresh_every=2, replan_every=2)
+    picks = []
+    for _ in range(9):
+        picks.append((ctl.should_refresh(), ctl.should_replan()))
+        ctl.observe()
+    refreshes = [r for r, _ in picks]
+    replans = [p for _, p in picks]
+    assert refreshes == [True, False] * 4 + [True]
+    assert replans[0] is False          # warm-up refresh never replans
+    assert any(replans)
+    # replans only at refresh boundaries, thinned 2x
+    assert all(r for r, p in picks if p)
+    assert sum(replans) == 2
+
+
+# ---------------------------------------------- no-retrace + parity (sim)
+
+def _task_setup(seed=6, parts=3):
+    from repro.data.gnn_data import FullBatchTask, split_masks
+    from repro.graph import metis_partition, symmetric_normalize, synth_features
+    g = rmat(200, 1000, seed=seed)
+    feats, labels = synth_features(g, 8, 4, seed=seed)
+    gn = symmetric_normalize(g)
+    tr, va, te = split_masks(g.num_nodes, seed=seed)
+    task = FullBatchTask(graph=gn, features=feats, labels=labels,
+                         train_mask=tr, val_mask=va, test_mask=te,
+                         num_classes=4)
+    ps = build_partition(gn, metis_partition(gn, parts, seed=seed), hops=1)
+    return task, ps
+
+
+def test_sim_adaptive_matches_static_and_never_retraces():
+    """An adaptive run whose re-plans preserve membership (policy
+    'overlap' on a static graph) is numerically the static runtime; the
+    jitted steps compile exactly once across every re-plan event."""
+    import jax
+    from repro.core import PROFILES, cal_capacity
+    from repro.dist import make_sim_runtime, stack_partitions, train_capgnn
+    from repro.models.gnn import GNNConfig
+
+    task, ps = _task_setup()
+    cfg = GNNConfig(model="gcn", in_dim=8, hidden_dim=8, out_dim=4,
+                    num_layers=3)
+    cap = cal_capacity(ps, cfg.feat_dims, [PROFILES["rtx3090"]] * 3,
+                       m_cpu_gib=0.001)
+    plan = build_cache_plan(ps, cap, refresh_every=2)
+    sp = stack_partitions(ps, task)
+    epochs, tau = 8, 2
+
+    def run(adaptive: bool):
+        from repro.optim import adam
+        opt = adam(1e-2)
+        planner = None
+        if adaptive:
+            planner = AdaptivePlanner(ps, cap, refresh_every=tau,
+                                      policy="overlap")
+            xp = planner.exchange_plan(plan)
+        else:
+            xp = build_exchange_plan(ps, plan)
+        rt = make_sim_runtime(cfg, sp, xp, opt)
+        ctl = StalenessController(refresh_every=tau)
+        params, rep = train_capgnn(cfg, rt, xp, 3, opt, epochs=epochs,
+                                   controller=ctl, pipeline=True,
+                                   seed=0, planner=planner)
+        return params, rep, rt
+
+    p_static, rep_static, _ = run(False)
+    p_adapt, rep_adapt, rt = run(True)
+    assert rep_adapt.replan_events > 0
+    # membership-preserving re-plans change nothing: exact loss trajectory
+    np.testing.assert_allclose(rep_adapt.losses, rep_static.losses,
+                               rtol=1e-5, atol=1e-5)
+    for a, b in zip(jax.tree.leaves(p_adapt), jax.tree.leaves(p_static)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    # byte accounting identical to the frozen plan's (same membership)
+    assert rep_adapt.comm_bytes == rep_static.comm_bytes
+    # no retraces: one compiled call per step flavour across all re-plans
+    for name in ("refresh", "cached", "pipelined"):
+        assert rt.jit_steps[name]._cache_size() <= 1, name
+
+
+def test_sim_lru_replan_rows_exact_and_no_retrace():
+    """Membership-churning LRU re-plans: plan-counted rows == valid-mask
+    rows of the arrays each step actually consumed, across transitions."""
+    import jax
+    from repro.dist import (init_caches, make_sim_runtime, stack_partitions)
+    from repro.models.gnn import GNNConfig, init_gnn
+    from repro.optim import adam
+
+    task, ps = _task_setup(seed=7)
+    cfg = GNNConfig(model="gcn", in_dim=8, hidden_dim=8, out_dim=4,
+                    num_layers=3)
+    max_halo = max(pt.n_halo for pt in ps.parts)
+    cap = CacheCapacity(c_gpu=[max(1, max_halo // 3)] * 3,
+                        c_cpu=max(1, ps.halo_union().size // 4))
+    planner = AdaptivePlanner(ps, cap, refresh_every=2, policy="lru")
+    xp = planner.exchange_plan(planner.plan)
+    opt = adam(1e-2)
+    rt = make_sim_runtime(cfg, stack_partitions(ps, task), xp, opt)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    opt_state = opt.init(params)
+    caches = init_caches(cfg, xp, 3)
+    ctl = StalenessController(refresh_every=2)
+    memberships = set()
+    plan_rows = measured = 0
+    for e in range(8):
+        refresh = ctl.should_refresh()
+        x_read = rt.xplan
+        if ctl.should_replan():
+            x_next = planner.exchange_plan(planner.replan())
+            xr_arr = rt._state["xarr"]
+            params, opt_state, caches, m = rt.step_transition(
+                params, opt_state, caches, x_next)
+            xe_arr = rt._state["xarr"]
+            plan_rows += (x_read.uncached.n_rows + x_next.local.n_rows
+                          + x_next.glob.n_unique)
+            measured += (int(np.asarray(xr_arr["un"]["recv_valid"]).sum())
+                         + int(np.asarray(xe_arr["loc"]["recv_valid"]).sum())
+                         + int(np.asarray(xe_arr["gl"]["buf_valid"]).sum()))
+        else:
+            fn = rt.step_refresh if refresh else rt.step_cached
+            params, opt_state, caches, m = fn(params, opt_state, caches)
+            xa = rt._state["xarr"]
+            plan_rows += x_read.uncached.n_rows
+            measured += int(np.asarray(xa["un"]["recv_valid"]).sum())
+            if refresh:
+                plan_rows += x_read.local.n_rows + x_read.glob.n_unique
+                measured += (int(np.asarray(xa["loc"]["recv_valid"]).sum())
+                             + int(np.asarray(xa["gl"]["buf_valid"]).sum()))
+        memberships.add(tuple(sorted(
+            int(v) for w in planner.plan.workers for v in w.local_gids)))
+        planner.observe_step(layers=2)
+        ctl.observe(None, refreshed=refresh)
+        assert np.isfinite(float(m["loss"]))
+    assert plan_rows == measured
+    assert len(memberships) >= 2        # the re-plans really changed tiers
+    for name in ("refresh", "cached", "pipelined"):
+        assert rt.jit_steps[name]._cache_size() <= 1, name
+
+
+# --------------------------------------------------- SPMD subprocess parity
+
+@pytest.mark.parametrize("transport", ["p2p", "allgather"])
+def test_spmd_adaptive_parity_and_no_retrace(transport):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, _SCRIPT, "--transport", transport],
+                         capture_output=True, text=True, timeout=900,
+                         env=env)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    assert "OK" in res.stdout
