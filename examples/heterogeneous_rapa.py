@@ -10,20 +10,13 @@ import numpy as np
 
 from repro.core import (PAPER_GROUPS, RapaConfig, StalenessController,
                         build_cache_plan, cal_capacity, do_partition,
-                        make_group)
-from repro.core.rapa import _lambda, _make_states
+                        make_group, partition_lambdas)
 from repro.data import make_task
 from repro.dist import (build_exchange_plan, make_sim_runtime,
                         stack_partitions, train_capgnn)
 from repro.graph import build_partition, metis_partition
 from repro.models.gnn import GNNConfig
 from repro.optim import adam
-
-
-def lambdas(ps, profiles, cfg):
-    states = _make_states(ps)
-    return np.array([_lambda(st, profiles[i], profiles, cfg, ps.num_parts)
-                     for i, st in enumerate(states)])
 
 
 def main():
@@ -36,7 +29,7 @@ def main():
         p = len(profiles)
         ps = build_partition(task.graph, metis_partition(task.graph, p, seed=0),
                              hops=1)
-        lam0 = lambdas(ps, profiles, cfg_r)
+        lam0 = partition_lambdas(ps, profiles, cfg_r)
         res = do_partition(ps, profiles, cfg_r)
         lam1 = res.lambda_final
         het = max(pr.mm for pr in profiles) / min(pr.mm for pr in profiles)

@@ -1,6 +1,6 @@
 """CaPGNN core: halo analytics, JACA caching, RAPA partitioning, staleness."""
 from .device_profile import (DeviceProfile, PROFILES, PAPER_GROUPS, TPU_V5E,
-                             measure_profile, make_group)
+                             measure_profile, make_group, capability_weights)
 from .halo import HaloStats, halo_stats, overlap_histogram, duplicate_count
 from .jaca import (CacheCapacity, cal_capacity, CachePlan, WorkerCachePlan,
                    build_cache_plan, plan_hit_rate, simulate_policy_hit_rate,
@@ -8,18 +8,18 @@ from .jaca import (CacheCapacity, cal_capacity, CachePlan, WorkerCachePlan,
                    ADAPTIVE_POLICIES)
 from .rapa import (RapaConfig, RapaResult, comm_cost, comp_cost,
                    influence_scores, adjust_subgraph, do_partition,
-                   memory_bytes)
+                   memory_bytes, partition_lambdas)
 from .staleness import StalenessController, theorem1_bound
 
 __all__ = [
     "DeviceProfile", "PROFILES", "PAPER_GROUPS", "TPU_V5E", "measure_profile",
-    "make_group",
+    "make_group", "capability_weights",
     "HaloStats", "halo_stats", "overlap_histogram", "duplicate_count",
     "CacheCapacity", "cal_capacity", "CachePlan", "WorkerCachePlan",
     "build_cache_plan", "plan_hit_rate", "simulate_policy_hit_rate",
     "comm_bytes_per_step", "AdaptivePlanner", "plan_from_membership",
     "ADAPTIVE_POLICIES",
     "RapaConfig", "RapaResult", "comm_cost", "comp_cost", "influence_scores",
-    "adjust_subgraph", "do_partition", "memory_bytes",
+    "adjust_subgraph", "do_partition", "memory_bytes", "partition_lambdas",
     "StalenessController", "theorem1_bound",
 ]

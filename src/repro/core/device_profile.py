@@ -22,7 +22,7 @@ import time
 import numpy as np
 
 __all__ = ["DeviceProfile", "PROFILES", "TPU_V5E", "measure_profile",
-           "make_group"]
+           "make_group", "capability_weights"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +75,23 @@ def make_group(names: list[str]) -> list[DeviceProfile]:
     return [PROFILES[n] for n in names]
 
 
+def capability_weights(profiles: list[DeviceProfile],
+                       alpha: float = 0.7) -> np.ndarray:
+    """Per-device partition target fractions from compute capability.
+
+    Inverts the Eq. 14 cost mix: device i's share is proportional to
+    ``1 / (alpha * spmm_i + (1 - alpha) * mm_i)`` so the weakest device
+    receives the smallest inner vertex set.  ``alpha`` is the SpMM-vs-MM
+    weight (same meaning as :class:`repro.core.rapa.RapaConfig.alpha`).
+    Returns weights normalised to sum to 1, suitable for the ``weights=``
+    argument of the partitioners in :mod:`repro.graph.partition`.
+    """
+    t = np.array([alpha * p.spmm + (1.0 - alpha) * p.mm for p in profiles],
+                 dtype=np.float64)
+    w = 1.0 / np.maximum(t, 1e-12)
+    return w / w.sum()
+
+
 # Paper Table 4 groups x2..x8.
 PAPER_GROUPS: dict[str, list[str]] = {
     "x2": ["rtx3090"] * 2,
@@ -114,10 +131,29 @@ def measure_profile(size: int = 1024, sparsity: float = 0.996,
     for _ in range(repeats):
         jax.device_put(host).block_until_ready()
     h2d = (time.perf_counter() - t0) / repeats
+    # D2H must pull a *fresh* device buffer each repeat: JAX memoises the
+    # host copy of a committed array, so repeated np.asarray(a) on the same
+    # buffer measures a dict lookup (~0), not the transfer.
+    bufs = [(a + float(i + 1)) for i in range(repeats)]
+    for buf in bufs:
+        buf.block_until_ready()
     t0 = time.perf_counter()
-    for _ in range(repeats):
-        np.asarray(a)
+    for buf in bufs:
+        jax.device_get(buf)
     d2h = (time.perf_counter() - t0) / repeats
     idt = timed(jax.jit(lambda x: x + 0.0), a)
-    mem = 16.0
+    mem = _backend_mem_gib(jax, default=16.0)
     return DeviceProfile("measured", mm, spmm, h2d, d2h, idt, mem)
+
+
+def _backend_mem_gib(jax, default: float) -> float:
+    """Device memory in GiB from the backend, ``default`` if unavailable
+    (CPU backends typically expose no memory stats)."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+        limit = (stats or {}).get("bytes_limit", 0)
+        if limit:
+            return float(limit) / 1024.0 ** 3
+    except Exception:
+        pass
+    return default

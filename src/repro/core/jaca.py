@@ -72,12 +72,21 @@ def cal_capacity(ps: PartitionSet, feat_dims: Sequence[int],
                  m_cpu_gib: float = 16.0,
                  reserved_gpu_mib: float = 512.0,
                  reserved_cpu_mib: float = 1024.0,
-                 top_k: int = -1) -> CacheCapacity:
+                 top_k: int = -1,
+                 reserve_partition: bool = True,
+                 m_edge: int = 8) -> CacheCapacity:
     """Paper Algorithm 1 (``cal_capacity``).
 
     A cached vertex stores one row per layer of the feature dims in
     ``feat_dims`` (input features + per-layer embeddings), fp32.
     ``top_k`` limits candidates per partition (-1 = all halo vertices).
+
+    ``reserve_partition=True`` sets the cache budget *jointly* with the
+    partition sizes (§4.3): each worker's resident subgraph — its local
+    vertices' feature/embedding rows plus ``m_edge`` bytes per local edge
+    — is subtracted from device memory before the cache claims the rest,
+    so with resource-aware uneven partitions big-memory devices absorb
+    more cache residents and small devices don't overcommit.
     """
     bytes_per_vertex = float(sum(d * 4 for d in feat_dims))
     c_gpu: list[int] = []
@@ -85,6 +94,10 @@ def cal_capacity(ps: PartitionSet, feat_dims: Sequence[int],
     for i, part in enumerate(ps.parts):
         n_cand = part.n_halo if top_k < 0 else min(top_k, part.n_halo)
         avail = max(0.0, profiles[i].mem_gib * 1024.0 - reserved_gpu_mib) * 1024.0 ** 2
+        if reserve_partition:
+            resident = (part.n_local * bytes_per_vertex
+                        + part.local_graph.num_edges * float(m_edge))
+            avail = max(0.0, avail - resident)
         cap = int(min(avail // bytes_per_vertex, n_cand))
         c_gpu.append(cap)
         # candidates contribute to the CPU tier's working set

@@ -31,7 +31,7 @@ from .device_profile import DeviceProfile
 
 __all__ = ["RapaConfig", "RapaResult", "comm_cost", "comp_cost",
            "influence_scores", "adjust_subgraph", "do_partition",
-           "memory_bytes"]
+           "memory_bytes", "partition_lambdas"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +147,18 @@ def _lambda(st: _PartState, prof: DeviceProfile,
             num_parts: int) -> float:
     return (comp_cost(st.e_all, st.part.n_inner, prof, profiles, cfg.alpha)
             + comm_cost(st.e_outer, prof, profiles, num_parts))
+
+
+def partition_lambdas(ps: PartitionSet, profiles: Sequence[DeviceProfile],
+                      cfg: RapaConfig | None = None) -> np.ndarray:
+    """Per-partition modeled step cost lambda_i (Eq. 13 + Eq. 14) of an
+    existing partitioning on a device group — the public evaluation helper
+    benchmarks and examples use (``max(partition_lambdas(...))`` is the
+    modeled step time, the straggler's cost)."""
+    cfg = cfg or RapaConfig()
+    states = _make_states(ps)
+    return np.array([_lambda(st, profiles[i], profiles, cfg, ps.num_parts)
+                     for i, st in enumerate(states)])
 
 
 def adjust_subgraph(states: list[_PartState],

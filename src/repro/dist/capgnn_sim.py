@@ -259,6 +259,14 @@ class SimRuntime:
     # the currently-installed plan's arrays.
     jit_steps: dict | None = dataclasses.field(default=None, repr=False)
     _state: dict | None = dataclasses.field(default=None, repr=False)
+    # the stacked layout this runtime was built over — kept for padded-row
+    # accounting under uneven (resource-aware) partitions
+    stacked: StackedParts | None = dataclasses.field(default=None, repr=False)
+
+    def padding_stats(self) -> dict:
+        """Valid vs padded stacked-row counts (see
+        :meth:`repro.dist.StackedParts.padding_stats`)."""
+        return self.stacked.padding_stats() if self.stacked else {}
 
     def set_plan(self, xplan: ExchangePlan) -> None:
         """Install a re-ranked plan.  Under a capacity-padded (slot-stable)
@@ -448,7 +456,7 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                       evaluate=evaluate,
                       caches0=caches0, backend=backend,
                       halo_dtype_bytes=hd_bytes,
-                      jit_steps=jit_steps, _state=state)
+                      jit_steps=jit_steps, _state=state, stacked=sp)
 
 
 # ---------------------------------------------------------------------------

@@ -182,6 +182,14 @@ class SpmdRuntime:
     halo_dtype_bytes: int = 4
     jit_steps: dict | None = dataclasses.field(default=None, repr=False)
     _state: dict | None = dataclasses.field(default=None, repr=False)
+    # the stacked layout this runtime was built over — kept for padded-row
+    # accounting under uneven (resource-aware) partitions
+    stacked: StackedParts | None = dataclasses.field(default=None, repr=False)
+
+    def padding_stats(self) -> dict:
+        """Valid vs padded stacked-row counts (see
+        :meth:`repro.dist.StackedParts.padding_stats`)."""
+        return self.stacked.padding_stats() if self.stacked else {}
 
     def wire_rows(self, refresh: bool, padded: bool = False) -> dict:
         """Rows this runtime's transport moves in one layer exchange (see
@@ -508,4 +516,4 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                        step_pipelined=wrap("pipelined"),
                        evaluate=evaluate, caches0=caches0, backend=backend,
                        transport=transport, halo_dtype_bytes=hd_bytes,
-                       jit_steps=jit_steps, _state=state)
+                       jit_steps=jit_steps, _state=state, stacked=sp)

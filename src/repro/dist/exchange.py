@@ -72,6 +72,12 @@ class ExchangeCapacity:
     array *shapes* a function of the capacities only — tier membership
     becomes data (indices + valid masks), so online re-planning never
     changes shapes and never retraces a jitted step.
+
+    The scalar widths are the fleet maxima (rectangular arrays force a
+    single shape); the ``*_w`` vectors record each worker's *tight* bound,
+    so uneven (resource-aware) partitions keep exact per-worker accounting
+    — the gap between ``P * scalar`` and ``sum(vector)`` is the padded-row
+    waste the static shapes carry (see :meth:`padding_waste`).
     """
     un_recv: int     # uncached recv rows per consumer (<= its halo size)
     loc_recv: int    # local-tier recv rows per consumer (<= min(c_gpu, halo))
@@ -80,6 +86,40 @@ class ExchangeCapacity:
     glob_send: int   # dedup send rows per owner into the global buffer
     peer: int        # per-(owner, peer) packed block width
     glob_buf: int    # unique rows resident in the global buffer (<= c_cpu)
+    # per-worker tight widths (accounting; shapes always use the scalars)
+    un_recv_w: np.ndarray | None = None    # [P]
+    loc_recv_w: np.ndarray | None = None   # [P]
+    glob_read_w: np.ndarray | None = None  # [P]
+    send_w: np.ndarray | None = None       # [P]
+
+    def __post_init__(self):
+        # fleet-uniform fallback: every worker bounded by the scalar width
+        def default(field, scalar):
+            if getattr(self, field) is None:
+                object.__setattr__(self, field,
+                                   np.full(1, scalar, np.int64))
+        default("un_recv_w", self.un_recv)
+        default("loc_recv_w", self.loc_recv)
+        default("glob_read_w", self.glob_read)
+        default("send_w", self.send)
+
+    def padding_waste(self) -> dict:
+        """Padded-minus-valid row counts of the slot-stable layout, per
+        tier, plus the aggregate waste fraction over all recv/send slots."""
+        p = int(np.asarray(self.un_recv_w).shape[0])
+        out = {}
+        valid = padded = 0
+        for field, scalar in (("un_recv", self.un_recv),
+                              ("loc_recv", self.loc_recv),
+                              ("glob_read", self.glob_read),
+                              ("send", self.send)):
+            v = int(np.asarray(getattr(self, field + "_w")).sum())
+            tot = p * int(scalar)
+            out[f"{field}_padded_rows"] = tot - v
+            valid += v
+            padded += tot
+        out["waste_frac"] = float((padded - valid) / max(padded, 1))
+        return out
 
 
 def exchange_capacity(ps: PartitionSet, capacity) -> ExchangeCapacity:
@@ -96,27 +136,31 @@ def exchange_capacity(ps: PartitionSet, capacity) -> ExchangeCapacity:
       rows — a plan property of the partitioning, not of the tiering.
     """
     p = ps.num_parts
-    h_sizes = [pt.n_halo for pt in ps.parts]
+    h_sizes = np.array([pt.n_halo for pt in ps.parts], np.int64)
     union = ps.halo_union()
     owner = ps.assign
-    exportable = np.bincount(owner[union], minlength=p) if union.size \
-        else np.zeros(p, np.int64)
+    exportable = np.bincount(owner[union], minlength=p).astype(np.int64) \
+        if union.size else np.zeros(p, np.int64)
     c_cpu = int(min(capacity.c_cpu, union.size))
     peer = 0
     for pt in ps.parts:
         if pt.n_halo:
             peer = max(peer, int(np.bincount(owner[pt.halo_nodes],
                                              minlength=p).max()))
+    un_recv_w = h_sizes
+    loc_recv_w = np.minimum(np.asarray(capacity.c_gpu, np.int64)[:p],
+                            h_sizes)
+    glob_read_w = np.minimum(h_sizes, c_cpu)
     return ExchangeCapacity(
-        un_recv=max(h_sizes, default=0),
-        loc_recv=max((min(int(cg), hs) for cg, hs in
-                      zip(capacity.c_gpu, h_sizes)), default=0),
-        glob_read=max((min(hs, c_cpu) for hs in h_sizes), default=0),
-        send=int(exportable.max()) if union.size else 0,
-        glob_send=int(min(int(exportable.max()) if union.size else 0,
-                          c_cpu)),
+        un_recv=int(un_recv_w.max(initial=0)),
+        loc_recv=int(loc_recv_w.max(initial=0)),
+        glob_read=int(glob_read_w.max(initial=0)),
+        send=int(exportable.max(initial=0)),
+        glob_send=int(min(int(exportable.max(initial=0)), c_cpu)),
         peer=peer,
-        glob_buf=c_cpu)
+        glob_buf=c_cpu,
+        un_recv_w=un_recv_w, loc_recv_w=loc_recv_w,
+        glob_read_w=glob_read_w, send_w=exportable)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -515,6 +559,12 @@ class StackedParts:
     pack (``stack_partitions(..., backend="ell" | "hybrid")``) consumed by
     the Pallas SpMM backends of the runtimes; the edge-list arrays are
     always present (GAT and the reference backend need them).
+
+    With resource-aware *uneven* partitions the per-part widths are
+    ragged; ``inner_valid``/``halo_valid`` mark the real rows of each
+    stacked slot (padding rows carry zero features/labels/masks and never
+    touch loss or accuracy) and :meth:`padding_stats` quantifies the
+    padded-row waste the rectangular layout carries.
     """
     num_parts: int
     n_inner_max: int
@@ -531,6 +581,44 @@ class StackedParts:
     e_dst: np.ndarray          # [P, ME] int32 in [0, NI] (NI = padding)
     e_w: np.ndarray            # [P, ME] float32 (0 at padding)
     ell: StackedEllPack | None = None
+    inner_valid: np.ndarray | None = None   # [P, NI] bool
+    halo_valid: np.ndarray | None = None    # [P, NH] bool
+
+    def __post_init__(self):
+        if self.inner_valid is None:
+            iv = (np.arange(self.n_inner_max)[None, :]
+                  < np.asarray(self.n_inner)[:, None])
+            object.__setattr__(self, "inner_valid", iv)
+        if self.halo_valid is None:
+            hv = (np.arange(self.n_halo_max)[None, :]
+                  < np.asarray(self.n_halo)[:, None])
+            object.__setattr__(self, "halo_valid", hv)
+
+    @property
+    def n_edges(self) -> np.ndarray:
+        """Real (un-padded) edge count per part; padding slots carry
+        ``dst == n_inner_max``."""
+        return (self.e_dst < self.n_inner_max).sum(axis=1).astype(np.int64)
+
+    def padding_stats(self) -> dict:
+        """Valid vs padded slot counts of the rectangular stacked layout —
+        the waste uneven partitioning is judged on in
+        ``benchmarks/heterogeneous.py``."""
+        p = self.num_parts
+        rows = {
+            "inner": (int(self.inner_valid.sum()), p * self.n_inner_max),
+            "halo": (int(self.halo_valid.sum()), p * self.n_halo_max),
+            "edges": (int(self.n_edges.sum()), p * int(self.e_src.shape[1])),
+        }
+        out = {}
+        valid = total = 0
+        for name, (v, t) in rows.items():
+            out[f"{name}_valid_rows"] = v
+            out[f"{name}_padded_rows"] = t - v
+            valid += v
+            total += t
+        out["waste_frac"] = float((total - valid) / max(total, 1))
+        return out
 
 
 def _stack_ell(edge_lists: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
@@ -571,16 +659,27 @@ def _stack_ell(edge_lists: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
 
 def stack_partitions(ps: PartitionSet, task: FullBatchTask,
                      backend: str = "edges",
-                     ell_quantile: float = 0.95) -> StackedParts:
+                     ell_quantile: float = 0.95,
+                     pad_to: tuple[int, int] | None = None) -> StackedParts:
     """Stack per-partition task slices; ``backend="ell" | "hybrid"`` also
     builds the stacked Pallas aggregation pack (``StackedEllPack``) the
-    runtimes' non-edge-list backends consume."""
+    runtimes' non-edge-list backends consume.
+
+    ``pad_to=(ni, nh)`` overrides the inner/halo padding widths (must
+    cover the ragged maxima) — two partitionings stacked to the same
+    widths produce shape-identical layouts, the stacking analogue of the
+    exchange plan's slot-stable capacity padding.
+    """
     if backend not in ("edges", "ell", "hybrid"):
         raise ValueError(f"unknown stacking backend {backend!r}; "
                          "expected 'edges', 'ell' or 'hybrid'")
     p = ps.num_parts
     ni = max(1, max(pt.n_inner for pt in ps.parts))
     nh = max(1, max(pt.n_halo for pt in ps.parts))
+    if pad_to is not None:
+        if pad_to[0] < ni or pad_to[1] < nh:
+            raise ValueError(f"pad_to {pad_to} < ragged maxima ({ni}, {nh})")
+        ni, nh = int(pad_to[0]), int(pad_to[1])
     f = task.features.shape[1]
 
     feats = np.zeros((p, ni, f), np.float32)

@@ -69,7 +69,9 @@ def fennel_partition(g: Graph, parts: int, seed: int = 0, gamma: float = 1.5,
         p = int(np.argmax(gain - penalty))
         assign[v] = p
         sizes[p] += 1
-    return assign
+    if weights is None:
+        return assign
+    return _rebalance(g, assign, parts, w * n)
 
 
 def _heavy_edge_matching(g: Graph, rng: np.random.Generator) -> np.ndarray:
@@ -181,6 +183,55 @@ def _refine(g: Graph, assign: np.ndarray, parts: int, weights: np.ndarray,
     return assign
 
 
+def _rebalance(g: Graph, assign: np.ndarray, parts: int, target: np.ndarray,
+               imbalance: float = 1.05, passes: int = 8) -> np.ndarray:
+    """Enforce per-part size caps ``imbalance * target`` by migrating the
+    least internally-connected vertices of overfull parts into the
+    highest-affinity part with room.
+
+    Greedy growth and KL refinement only *avoid* overfilling a part — they
+    never shrink one that already overshot, so without this pass the
+    partitioners track capacity ``weights`` loosely (one part can absorb
+    half the graph), which defeats resource-aware uneven partitioning.
+
+    Runs only on the explicitly-weighted path: ``weights=None`` callers
+    keep the historical (balanced) partitioner output unchanged.
+    """
+    assign = assign.copy()
+    n = g.num_nodes
+    cap = np.maximum(imbalance * target, 1.0)
+    for _ in range(passes):
+        sizes = np.bincount(assign, minlength=parts).astype(np.float64)
+        over = np.where(sizes > cap)[0]
+        if over.size == 0:
+            break
+        # vertex -> part affinity (undirected edge counts), one snapshot
+        # per pass: stale within the pass, rebuilt between passes
+        src, dst = g.edges()
+        cnt = np.zeros((n, parts), np.float64)
+        np.add.at(cnt, (src, assign[dst]), 1.0)
+        np.add.at(cnt, (dst, assign[src]), 1.0)
+        moved = 0
+        for po in over:
+            members = np.where(assign == po)[0]
+            order = members[np.argsort(cnt[members, po], kind="stable")]
+            for v in order:
+                if sizes[po] <= cap[po]:
+                    break
+                room = np.where(sizes + 1.0 <= cap)[0]
+                room = room[room != po]
+                if room.size == 0:
+                    break
+                dest = room[np.argmax(cnt[v, room])]
+                assign[v] = dest
+                sizes[po] -= 1.0
+                sizes[dest] += 1.0
+                moved += 1
+        if moved == 0:
+            break
+    return assign.astype(np.int32)
+
+
 def metis_partition(g: Graph, parts: int, seed: int = 0,
                     weights: Sequence[float] | None = None,
                     coarsen_to: int = 256) -> np.ndarray:
@@ -201,7 +252,10 @@ def metis_partition(g: Graph, parts: int, seed: int = 0,
     for fine, coarse in reversed(levels):
         assign = assign[coarse].astype(np.int32)
         assign = _refine(fine, assign, parts, w)
-    return assign.astype(np.int32)
+    if weights is None:
+        return assign.astype(np.int32)
+    assign = _rebalance(g, assign, parts, w * g.num_nodes)
+    return _refine(g, assign, parts, w).astype(np.int32)
 
 
 def edge_cut(g: Graph, assign: np.ndarray) -> int:
@@ -290,36 +344,58 @@ def _k_hop_halo(g_rev: Graph, inner: np.ndarray, inner_mask: np.ndarray,
     Aggregation at an inner vertex needs its in-neighbours; stacking L layers
     needs the L-hop in-neighbourhood (paper Obs. 1 varies `hops`).
     """
-    frontier = inner
+    indptr, indices = g_rev.indptr, g_rev.indices
+    frontier = np.asarray(inner, dtype=np.int64)
     seen = inner_mask.copy()
     halo: list[np.ndarray] = []
     for _ in range(hops):
-        nxt: list[np.ndarray] = []
-        for v in frontier:
-            nbr = g_rev.neighbors(int(v))
-            new = nbr[~seen[nbr]]
-            if new.size:
-                seen[new] = True
-                nxt.append(new)
-        if not nxt:
+        if frontier.size == 0:
             break
-        frontier = np.concatenate(nxt)
-        halo.append(frontier)
+        starts = indptr[frontier]
+        counts = indptr[frontier + 1] - starts
+        total = int(counts.sum())
+        if total == 0:
+            break
+        # gather every frontier vertex's neighbour list in one shot:
+        # idx[k] walks starts[j] .. starts[j]+counts[j]-1 for each j
+        excl = np.cumsum(counts) - counts
+        idx = np.repeat(starts - excl, counts) + np.arange(total)
+        nbr = indices[idx].astype(np.int64)
+        new = np.unique(nbr[~seen[nbr]])
+        if new.size == 0:
+            break
+        seen[new] = True
+        halo.append(new)
+        frontier = new
     if not halo:
         return np.zeros(0, np.int64)
     return np.unique(np.concatenate(halo)).astype(np.int64)
 
 
-def build_partition(g: Graph, assign: np.ndarray, hops: int = 1) -> PartitionSet:
+def build_partition(g: Graph, assign: np.ndarray, hops: int = 1,
+                    parts: int | None = None) -> PartitionSet:
     """Materialise vertex-centric partitions with k-hop halos.
 
     Edges kept in partition i: every edge (u -> v) with v inner to i and u in
     (inner U halo).  This is exactly what L-layer aggregation into inner
     vertices requires when halo embeddings for layers >0 are *communicated*
     (hops=1) or replicated deeper (hops=L).
+
+    ``parts`` fixes the number of partitions explicitly; without it the
+    count is inferred as ``assign.max() + 1``, which drops trailing empty
+    parts (and crashes on an empty assignment) — callers that promised a
+    fleet size (e.g. ``rapa.do_partition``'s ``len(profiles) ==
+    ps.num_parts`` contract) must pass it.  Empty parts materialise with
+    zero inner vertices, an empty halo and an empty local graph.
     """
-    parts_ids = np.unique(assign)
-    num_parts = int(assign.max()) + 1
+    assign = np.asarray(assign)
+    if parts is None:
+        num_parts = int(assign.max()) + 1 if assign.size else 0
+    else:
+        num_parts = int(parts)
+        if assign.size and int(assign.max()) >= num_parts:
+            raise ValueError(f"assign references part {int(assign.max())} "
+                             f">= parts={num_parts}")
     g_rev = g.reverse()
     src, dst = g.edges()
     w = g.edge_weight

@@ -25,7 +25,7 @@ def run_gnn(args) -> dict:
     from repro.core import (PROFILES, PAPER_GROUPS, make_group, cal_capacity,
                             build_cache_plan, do_partition, RapaConfig,
                             CacheCapacity, StalenessController,
-                            AdaptivePlanner)
+                            AdaptivePlanner, capability_weights)
     from repro.data import make_task
     from repro.dist import (build_exchange_plan, stack_partitions,
                             make_sim_runtime, train_capgnn)
@@ -37,12 +37,23 @@ def run_gnn(args) -> dict:
                      seed=args.seed)
     g = task.graph
     p = args.parts
-    part_fn = {"metis": metis_partition, "random": random_partition}[args.partitioner]
-    assign = part_fn(g, p, seed=args.seed)
-    ps = build_partition(g, assign, hops=1)
 
-    profiles = make_group(PAPER_GROUPS[f"x{p}"]) if f"x{p}" in PAPER_GROUPS \
-        else [PROFILES["rtx3090"]] * p
+    # device group first: with --uneven the profile shapes the partition
+    # sizes (RAPA's resource-aware pre-partition), not just the pruning
+    group = getattr(args, "group", "auto")
+    if group == "auto":
+        group = f"x{p}" if f"x{p}" in PAPER_GROUPS else "uniform"
+    profiles = ([PROFILES["rtx3090"]] * p if group == "uniform"
+                else make_group(PAPER_GROUPS[group]))
+    if len(profiles) != p:
+        raise SystemExit(f"device group {group!r} has {len(profiles)} "
+                         f"devices but --parts={p}")
+
+    uneven = getattr(args, "uneven", True)
+    weights = capability_weights(profiles) if uneven else None
+    part_fn = {"metis": metis_partition, "random": random_partition}[args.partitioner]
+    assign = part_fn(g, p, seed=args.seed, weights=weights)
+    ps = build_partition(g, assign, hops=1, parts=p)
     if args.rapa:
         res = do_partition(ps, profiles, RapaConfig(feat_dim=args.feat_dim))
         ps = res.partition_set
@@ -100,6 +111,9 @@ def run_gnn(args) -> dict:
     _, test_acc = runtime.evaluate(params, "test")
     out = {
         "dataset": args.dataset, "model": args.model, "parts": p,
+        "group": group, "uneven": bool(uneven),
+        "inner_sizes": [pt.n_inner for pt in ps.parts],
+        "stack_waste_frac": runtime.padding_stats().get("waste_frac"),
         "epochs": args.epochs, "resumed_from": start_epoch,
         "final_loss": report.losses[-1] if report.losses else None,
         "halo_dtype": halo_dtype,
@@ -202,6 +216,18 @@ def main():
     g.add_argument("--no-jaca", dest="jaca", action="store_false")
     g.add_argument("--rapa", action="store_true", default=True)
     g.add_argument("--no-rapa", dest="rapa", action="store_false")
+    g.add_argument("--uneven", action="store_true", default=True,
+                   help="profile-weighted uneven partition sizes (RAPA "
+                        "resource-aware pre-partition; weakest device gets "
+                        "the smallest inner set)")
+    g.add_argument("--even", dest="uneven", action="store_false",
+                   help="uniform partition targets regardless of profile")
+    from repro.core.device_profile import PAPER_GROUPS
+    g.add_argument("--group", default="auto",
+                   choices=["auto", "uniform"] + sorted(PAPER_GROUPS),
+                   help="device group: a paper Table 4 group (x2..x8), "
+                        "'uniform' (all rtx3090), or 'auto' (x<parts> if "
+                        "defined, else uniform)")
     g.add_argument("--pipeline", action="store_true", default=True)
     g.add_argument("--no-pipeline", dest="pipeline", action="store_false")
     g.add_argument("--refresh-every", type=int, default=4)

@@ -101,3 +101,68 @@ def test_halo_grows_with_hops_and_parts():
     a8 = metis_partition(g, 8, seed=0)
     h8 = build_partition(g, a8, hops=1).total_halo()
     assert h8 >= h1
+
+
+def test_build_partition_empty_part_and_empty_assign():
+    """Regression: inferring ``assign.max() + 1`` dropped trailing empty
+    parts (breaking the ``len(profiles) == ps.num_parts`` contract) and
+    crashed on an empty assignment."""
+    g = rmat(600, 3000, seed=0)
+    assign = random_partition(g, 2, seed=0)
+    ps = build_partition(g, assign, hops=1, parts=3)   # part 2 never used
+    assert ps.num_parts == 3
+    empty = ps.parts[2]
+    assert empty.n_inner == 0 and empty.n_halo == 0
+    assert empty.local_graph.num_edges == 0
+    # a fleet-sized profile list now lines up with the partition count
+    from repro.core import PROFILES, RapaConfig, do_partition
+    res = do_partition(ps, [PROFILES["rtx3090"]] * 3, RapaConfig(feat_dim=8))
+    assert res.partition_set.num_parts == 3
+
+    none = np.zeros(0, np.int64)
+    g0 = csr_from_edges(none, none, 0)
+    assert build_partition(g0, none, hops=1).num_parts == 0
+    assert build_partition(g0, none, hops=1, parts=2).num_parts == 2
+    with pytest.raises(ValueError):
+        build_partition(g, assign, hops=1, parts=int(assign.max()))
+
+
+def _halo_reference(g, assign, pid, hops):
+    """Per-vertex BFS the vectorised ``_k_hop_halo`` replaced."""
+    g_rev = g.reverse()
+    inner = np.where(assign == pid)[0]
+    seen = {int(v) for v in inner}
+    frontier = sorted(seen)
+    halo = set()
+    for _ in range(hops):
+        nxt = []
+        for v in frontier:
+            for u in g_rev.neighbors(v):
+                u = int(u)
+                if u not in seen:
+                    seen.add(u)
+                    halo.add(u)
+                    nxt.append(u)
+        frontier = nxt
+    return halo
+
+
+def test_k_hop_halo_matches_slow_reference():
+    g = rmat(700, 5000, seed=4)
+    assign = random_partition(g, 3, seed=1)
+    for hops in (1, 2, 3):
+        ps = build_partition(g, assign, hops=hops)
+        for pt in ps.parts:
+            assert {int(v) for v in pt.halo_nodes} == \
+                _halo_reference(g, assign, pt.part_id, hops)
+
+
+def test_partitioners_track_capability_weights():
+    """The rebalance pass keeps part sizes near the per-part targets —
+    the property resource-aware uneven partitioning depends on."""
+    g = rmat(2000, 12000, seed=2)
+    w = np.array([0.4, 0.3, 0.2, 0.1])
+    for fn in (metis_partition, fennel_partition):
+        sizes = np.bincount(fn(g, 4, seed=0, weights=w), minlength=4)
+        assert np.all(sizes <= 1.12 * w * g.num_nodes + 1)
+        assert sizes[0] > sizes[2] > sizes[3]

@@ -140,3 +140,27 @@ def test_global_tier_requires_membership(ps):
     for w in plan.workers:
         assert all(int(v) in gset for v in w.global_gids)
     assert plan.global_gids.size <= 30
+
+
+def test_cal_capacity_reserves_partition_residents(ps):
+    """Joint budgeting (§4.3): the resident subgraph is charged against
+    device memory before the cache claims the remainder, so a device
+    whose memory barely fits its partition gets (almost) no cache."""
+    import dataclasses as dc
+    feat_dims = [64, 32, 32]
+    bpv = sum(feat_dims) * 4
+    base = [PROFILES["rtx3090"]] * 4
+    free = cal_capacity(ps, feat_dims, base, reserve_partition=False)
+    joint = cal_capacity(ps, feat_dims, base)
+    assert all(j <= f for j, f in zip(joint.c_gpu, free.c_gpu))
+
+    tight = []
+    for part in ps.parts:
+        resident = part.n_local * bpv + part.local_graph.num_edges * 8.0
+        gib = (resident + 512 * 1024 ** 2 + 10 * bpv) / 1024 ** 3
+        tight.append(dc.replace(PROFILES["rtx3090"], mem_gib=gib))
+    reserved = cal_capacity(ps, feat_dims, tight)
+    assert all(c <= 10 for c in reserved.c_gpu)
+    unreserved = cal_capacity(ps, feat_dims, tight,
+                              reserve_partition=False)
+    assert any(c > 10 for c in unreserved.c_gpu)

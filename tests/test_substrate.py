@@ -9,7 +9,8 @@ import pytest
 
 from repro.checkpoint import save_checkpoint, load_checkpoint, latest_step
 from repro.core import StalenessController, theorem1_bound, measure_profile
-from repro.core.device_profile import PROFILES, PAPER_GROUPS, make_group, TPU_V5E
+from repro.core.device_profile import (PROFILES, PAPER_GROUPS, make_group,
+                                       TPU_V5E, capability_weights)
 from repro.graph import rmat, symmetric_normalize, reorder_partition_arrays, build_partition
 from repro.graph.partition import metis_partition
 from repro.models.gnn import (GNNConfig, init_gnn, gnn_forward,
@@ -194,3 +195,25 @@ def test_reorder_preserves_graph_semantics():
     ns, nd = new_g.edges()
     assert sorted(zip(inv[src].tolist(), inv[dst].tolist())) == \
         sorted(zip(ns.tolist(), nd.tolist()))
+
+
+def test_measure_profile_d2h_not_cache_hit():
+    """Regression: the d2h loop re-converted the same committed array, so
+    JAX served the memoised host copy and d2h measured ~0 (hundreds of
+    times faster than h2d), poisoning RAPA's Eq. 13 comm ratios.  Real
+    same-size transfers land within an order of magnitude of each other."""
+    prof = measure_profile(size=512, repeats=3)
+    assert prof.d2h > 0
+    assert prof.d2h <= prof.h2d * 10
+    assert prof.h2d <= prof.d2h * 10
+    assert prof.mem_gib > 0
+
+
+def test_capability_weights_order_and_normalisation():
+    profs = make_group(["rtx3090", "a40", "rtx3060", "gtx1650"])
+    w = capability_weights(profs)
+    assert w.shape == (4,)
+    assert w.sum() == pytest.approx(1.0)
+    assert np.all(w > 0)
+    # stronger device (smaller matmul times) gets the larger share
+    assert w[0] > w[2] > w[3]
