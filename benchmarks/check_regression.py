@@ -31,7 +31,7 @@ run the gated suites with ``REPRO_BENCH_TINY=1`` exactly as CI does, then
 ``--update`` and commit the new ``experiments/baseline.json``:
 
     REPRO_BENCH_TINY=1 PYTHONPATH=src python -m benchmarks.run \
-        --only kernels_bench,comm_volume,serve_bench,adaptive_cache,heterogeneous
+        --only kernels_bench,comm_volume,serve_bench,adaptive_cache,heterogeneous,out_of_core
     PYTHONPATH=src python -m benchmarks.check_regression --update
 """
 from __future__ import annotations
@@ -44,7 +44,7 @@ import sys
 DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
 # suites CI re-runs (REPRO_BENCH_TINY=1) before invoking this gate
 GATED_SUITES = ["kernels_bench", "comm_volume", "serve_bench",
-                "adaptive_cache", "heterogeneous"]
+                "adaptive_cache", "heterogeneous", "out_of_core"]
 TIMING_SUFFIXES = ("_ms", "_s", "_seconds")
 TIMING_MARKERS = ("time", "qps", "tok", "wall", "p50", "p99", "speedup",
                   "overhead", "benefit", "_leq_")

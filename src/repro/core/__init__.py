@@ -1,6 +1,7 @@
 """CaPGNN core: halo analytics, JACA caching, RAPA partitioning, staleness."""
 from .device_profile import (DeviceProfile, PROFILES, PAPER_GROUPS, TPU_V5E,
-                             measure_profile, make_group, capability_weights)
+                             measure_profile, make_group, capability_weights,
+                             detect_host_mem_gib)
 from .halo import HaloStats, halo_stats, overlap_histogram, duplicate_count
 from .jaca import (CacheCapacity, cal_capacity, CachePlan, WorkerCachePlan,
                    build_cache_plan, plan_hit_rate, simulate_policy_hit_rate,
@@ -13,7 +14,7 @@ from .staleness import StalenessController, theorem1_bound
 
 __all__ = [
     "DeviceProfile", "PROFILES", "PAPER_GROUPS", "TPU_V5E", "measure_profile",
-    "make_group", "capability_weights",
+    "make_group", "capability_weights", "detect_host_mem_gib",
     "HaloStats", "halo_stats", "overlap_histogram", "duplicate_count",
     "CacheCapacity", "cal_capacity", "CachePlan", "WorkerCachePlan",
     "build_cache_plan", "plan_hit_rate", "simulate_policy_hit_rate",

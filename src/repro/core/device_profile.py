@@ -22,13 +22,16 @@ import time
 import numpy as np
 
 __all__ = ["DeviceProfile", "PROFILES", "TPU_V5E", "measure_profile",
-           "make_group", "capability_weights"]
+           "make_group", "capability_weights", "detect_host_mem_gib"]
 
 
 @dataclasses.dataclass(frozen=True)
 class DeviceProfile:
     """Times (seconds, lower is better) for the paper's five microbenchmarks,
-    plus memory capacity in GiB."""
+    plus memory capacity in GiB.  ``host_mem_gib`` sizes the shared CPU
+    cache tier (JACA's C_CPU / the out-of-core host feature store) —
+    measured profiles detect it, declared Table 1 profiles keep the
+    paper's 16 GiB-host assumption."""
     name: str
     mm: float        # dense matmul time
     spmm: float      # sparse matmul time
@@ -36,6 +39,7 @@ class DeviceProfile:
     d2h: float       # device-to-host
     idt: float       # intra/inter-device transfer
     mem_gib: float
+    host_mem_gib: float = 16.0
 
     def compute_caps(self) -> tuple[float, float]:
         """Capabilities = inverse time (bigger is faster)."""
@@ -143,7 +147,29 @@ def measure_profile(size: int = 1024, sparsity: float = 0.996,
     d2h = (time.perf_counter() - t0) / repeats
     idt = timed(jax.jit(lambda x: x + 0.0), a)
     mem = _backend_mem_gib(jax, default=16.0)
-    return DeviceProfile("measured", mm, spmm, h2d, d2h, idt, mem)
+    return DeviceProfile("measured", mm, spmm, h2d, d2h, idt, mem,
+                         host_mem_gib=detect_host_mem_gib())
+
+
+def detect_host_mem_gib(default: float = 16.0) -> float:
+    """Total host RAM in GiB — ``os.sysconf`` where POSIX exposes it,
+    ``psutil`` as a fallback, ``default`` when neither is available.
+    Feeds :func:`repro.core.jaca.cal_capacity`'s CPU-tier budget (and the
+    out-of-core benchmark's host-RAM charge) so the shared CPU cache is
+    sized against the actual machine instead of a hardcoded constant."""
+    import os
+    try:
+        pages = os.sysconf("SC_PHYS_PAGES")
+        page_size = os.sysconf("SC_PAGE_SIZE")
+        if pages > 0 and page_size > 0:
+            return pages * page_size / 1024.0 ** 3
+    except (AttributeError, ValueError, OSError):
+        pass
+    try:
+        import psutil
+        return psutil.virtual_memory().total / 1024.0 ** 3
+    except Exception:
+        return default
 
 
 def _backend_mem_gib(jax, default: float) -> float:

@@ -4,7 +4,12 @@ Two-level cache for halo vertex features/embeddings:
 
 - **local cache**  — per-worker, device (HBM) resident, capacity ``C_GPU[i]``;
 - **global cache** — shared across workers (CPU shared memory in the paper;
-  a replicated buffer refreshed by collective here), capacity ``C_CPU``.
+  here a genuinely host-resident tier when the runtimes run with
+  ``features="host"`` — rows live in a
+  :class:`repro.dist.host_store.HostFeatureStore` and are staged
+  host→device per step — and a replicated device buffer refreshed by
+  collective in the legacy device-resident mode), capacity ``C_CPU``
+  charged against host RAM.
 
 Full-batch training touches every halo vertex every epoch, so the paper
 ranks candidates by the *static* *vertex overlap ratio* R(v) (Eq. 2) rather
@@ -69,7 +74,7 @@ class CacheCapacity:
 
 def cal_capacity(ps: PartitionSet, feat_dims: Sequence[int],
                  profiles: Sequence[DeviceProfile],
-                 m_cpu_gib: float = 16.0,
+                 m_cpu_gib: float | None = None,
                  reserved_gpu_mib: float = 512.0,
                  reserved_cpu_mib: float = 1024.0,
                  top_k: int = -1,
@@ -81,6 +86,12 @@ def cal_capacity(ps: PartitionSet, feat_dims: Sequence[int],
     ``feat_dims`` (input features + per-layer embeddings), fp32.
     ``top_k`` limits candidates per partition (-1 = all halo vertices).
 
+    ``m_cpu_gib`` budgets the shared CPU tier.  ``None`` (default) uses
+    the profiles' measured ``host_mem_gib`` (the minimum across workers —
+    the shared tier must fit every host), falling back to live detection
+    via :func:`repro.core.device_profile.detect_host_mem_gib`; pass an
+    explicit number to reproduce a fixed-budget experiment.
+
     ``reserve_partition=True`` sets the cache budget *jointly* with the
     partition sizes (§4.3): each worker's resident subgraph — its local
     vertices' feature/embedding rows plus ``m_edge`` bytes per local edge
@@ -88,6 +99,14 @@ def cal_capacity(ps: PartitionSet, feat_dims: Sequence[int],
     so with resource-aware uneven partitions big-memory devices absorb
     more cache residents and small devices don't overcommit.
     """
+    if m_cpu_gib is None:
+        host_gibs = [getattr(pr, "host_mem_gib", 0.0) or 0.0
+                     for pr in profiles]
+        if host_gibs and min(host_gibs) > 0.0:
+            m_cpu_gib = float(min(host_gibs))
+        else:
+            from .device_profile import detect_host_mem_gib
+            m_cpu_gib = detect_host_mem_gib()
     bytes_per_vertex = float(sum(d * 4 for d in feat_dims))
     c_gpu: list[int] = []
     h_cpu: set[int] = set()

@@ -7,20 +7,28 @@
   the `train_capgnn` loop with exact byte accounting.
 - :mod:`repro.dist.capgnn_spmd` — the same step functions lowered through
   ``shard_map`` collectives over a device mesh (flat or multi-pod).
+- :mod:`repro.dist.host_store` — out-of-core host feature/embedding store
+  with double-buffered host→device staged fetch, behind both runtimes'
+  ``features="host"`` mode and the serve engine's host tier.
 """
 from .exchange import (ExchangeCapacity, ExchangePlan, ExchangeTier,
-                       GlobalTier, StackedEllPack, StackedParts,
+                       GlobalTier, HostTier, StackedEllPack, StackedParts,
                        build_exchange_plan, exchange_capacity,
                        stack_partitions)
-from .capgnn_sim import (SimRuntime, TrainReport, exchange_arrays,
-                         init_caches, make_sim_runtime, train_capgnn)
+from .host_store import (HostFeatureStore, StagedFetch, halo_dtype_info,
+                         suggest_prefetch_depth)
+from .capgnn_sim import (RUNTIME_FEATURES, SimRuntime, TrainReport,
+                         exchange_arrays, init_caches, make_sim_runtime,
+                         train_capgnn)
 from .capgnn_spmd import SpmdRuntime, make_spmd_runtime, spmd_exchange_arrays
 
 __all__ = [
     "ExchangeCapacity", "ExchangePlan", "ExchangeTier", "GlobalTier",
-    "StackedEllPack", "StackedParts", "build_exchange_plan",
+    "HostTier", "StackedEllPack", "StackedParts", "build_exchange_plan",
     "exchange_capacity", "stack_partitions",
-    "SimRuntime", "TrainReport", "exchange_arrays", "init_caches",
-    "make_sim_runtime", "train_capgnn",
+    "HostFeatureStore", "StagedFetch", "halo_dtype_info",
+    "suggest_prefetch_depth",
+    "RUNTIME_FEATURES", "SimRuntime", "TrainReport", "exchange_arrays",
+    "init_caches", "make_sim_runtime", "train_capgnn",
     "SpmdRuntime", "make_spmd_runtime", "spmd_exchange_arrays",
 ]

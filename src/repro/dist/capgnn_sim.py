@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Callable
 
 import jax
@@ -45,26 +46,18 @@ from repro.models.gnn import (EdgeListAdj, EllAdj, GNNConfig, HybridAdj,
 from repro.optim import Optimizer
 
 from .exchange import ExchangePlan, ExchangeTier, GlobalTier, StackedParts
+# halo_dtype_info moved to host_store (the staged h2d path casts with the
+# same rules as the wire); re-exported here for backward compatibility
+from .host_store import HostFeatureStore, halo_dtype_info
 
 __all__ = ["make_sim_runtime", "SimRuntime", "init_caches", "train_capgnn",
            "TrainReport", "RUNTIME_BACKENDS", "check_backend",
-           "make_adj_builder", "halo_dtype_info", "exchange_arrays"]
+           "make_adj_builder", "halo_dtype_info", "exchange_arrays",
+           "RUNTIME_FEATURES"]
 
-
-def halo_dtype_info(halo_dtype) -> tuple:
-    """Normalise the halo payload dtype knob -> ``(cast dtype | None, bytes)``.
-
-    ``None``/f32 ships halo rows at full width; ``"bf16"`` casts the
-    payload before transport and dequantises back to the compute dtype on
-    scatter — halving every tier's wire bytes (threaded through
-    :meth:`~repro.dist.ExchangePlan.bytes_per_step` via ``dtype_bytes``).
-    """
-    if halo_dtype in (None, "f32", "fp32", "float32", jnp.float32):
-        return None, 4
-    if halo_dtype in ("bf16", "bfloat16", jnp.bfloat16):
-        return jnp.bfloat16, 2
-    raise ValueError(f"unknown halo_dtype {halo_dtype!r}; "
-                     "expected None, 'f32' or 'bf16'")
+# where the input features live: stacked on device, or host-resident with
+# per-step staged fetch of the non-locally-cached halo rows (out-of-core)
+RUNTIME_FEATURES = ("device", "host")
 
 
 # ---------------------------------------------------------------------------
@@ -93,16 +86,26 @@ def _glob_dict(g: GlobalTier) -> dict:
     }
 
 
-def exchange_arrays(xplan: ExchangePlan) -> dict:
+def exchange_arrays(xplan: ExchangePlan, include_host: bool = False) -> dict:
     """Device pytree of one plan's tier index arrays + valid masks.
 
     The jitted steps take this pytree as a *traced argument* (not a baked
     constant), so swapping in another plan's arrays — same shapes under a
     capacity-padded layout — re-plans the running step without retracing.
+    ``include_host`` adds the layer-0 host-tier scatter program consumed
+    by the ``features="host"`` runtimes.
     """
-    return {"un": _tier_dict(xplan.uncached),
-            "loc": _tier_dict(xplan.local),
-            "gl": _glob_dict(xplan.glob)}
+    out = {"un": _tier_dict(xplan.uncached),
+           "loc": _tier_dict(xplan.local),
+           "gl": _glob_dict(xplan.glob)}
+    if include_host:
+        if xplan.host is None:
+            raise ValueError("features='host' needs a plan with a host "
+                             "tier (rebuild via build_exchange_plan)")
+        out["host"] = {"feat_pos": jnp.asarray(xplan.host.feat_pos,
+                                               jnp.int32),
+                       "feat_valid": jnp.asarray(xplan.host.feat_valid)}
+    return out
 
 
 def _pull(td: dict, h: jnp.ndarray, halo_dtype=None) -> jnp.ndarray:
@@ -221,11 +224,17 @@ def make_adj_builder(sp: StackedParts, backend: str, interpret: bool = True):
 # Caches
 # ---------------------------------------------------------------------------
 
-def init_caches(cfg: GNNConfig, xplan: ExchangePlan, num_parts: int) -> dict:
+def init_caches(cfg: GNNConfig, xplan: ExchangePlan, num_parts: int,
+                features: str = "device") -> dict:
     """Zero-filled stale tiers, one entry per cached exchange layer.
 
     Entry ``l-1`` holds the halo inputs of layer ``l`` (layers ``1..L-1``);
     layer 0 consumes the static input features, which never go stale.
+
+    With ``features="host"`` the global tier is *host-resident* (it lives
+    in the runtime's :class:`~repro.dist.host_store.HostFeatureStore` and
+    is staged per step), so the device cache pytree carries only the
+    local tier.
     """
     dims = cfg.feat_dims[1: cfg.num_layers]
     r_local = int(np.asarray(xplan.local.recv_halo_pos).shape[1])
@@ -233,7 +242,8 @@ def init_caches(cfg: GNNConfig, xplan: ExchangePlan, num_parts: int) -> dict:
     return {
         "local": [jnp.zeros((num_parts, r_local, d), jnp.float32)
                   for d in dims],
-        "global": [jnp.zeros((g, d), jnp.float32) for d in dims],
+        "global": ([] if features == "host" else
+                   [jnp.zeros((g, d), jnp.float32) for d in dims]),
     }
 
 
@@ -254,6 +264,11 @@ class SimRuntime:
     caches0: dict
     backend: str = "edges"
     halo_dtype_bytes: int = 4   # actual wire width per halo payload entry
+    # feature residency: "device" (stacked on device) or "host"
+    # (out-of-core: host store + per-step staged fetch)
+    features: str = "device"
+    host_store: HostFeatureStore | None = dataclasses.field(default=None,
+                                                            repr=False)
     # online adaptation plumbing: the jitted step impls take the exchange
     # arrays of the (read, emit) plans as traced arguments; `_state` holds
     # the currently-installed plan's arrays.
@@ -273,21 +288,36 @@ class SimRuntime:
         layout the jitted steps keep their compiled executables — only the
         index data changes.  The caches' *content* still reflects the old
         tiering, so the next step must be a refresh (or have been emitted
-        by :meth:`step_transition`)."""
+        by :meth:`step_transition`).  In ``features="host"`` mode this
+        also flushes the staged-fetch ring and restages the layer-0 local
+        cache for the new plan."""
         self.xplan = xplan
-        self._state["xarr"] = exchange_arrays(xplan)
+        hook = (self._state or {}).get("_set_plan")
+        if hook is not None:
+            hook(xplan)
+        else:
+            self._state["xarr"] = exchange_arrays(xplan)
 
     def step_transition(self, params, opt_state, caches,
                         new_xplan: ExchangePlan):
         """Pipelined plan switch: consume the *current* plan's stale tiers
         (and its uncached exchange) while prefetching the **new** plan's
         tier rows in the refresh windows; the emitted caches are laid out
-        for ``new_xplan``, which becomes the installed plan."""
-        xe = exchange_arrays(new_xplan)
-        out = self.jit_steps["pipelined"](params, opt_state, caches,
-                                          self._state["xarr"], xe)
+        for ``new_xplan``, which becomes the installed plan.  In host
+        mode the stale global tier is staged on the *old* plan's layout,
+        the emitted buffers are written back under the new plan's
+        membership, and the layer-0 staging ring is flushed (its
+        prefetches carry old-plan rows — they are discarded unaccounted,
+        never served)."""
+        hook = (self._state or {}).get("_transition")
+        if hook is not None:
+            out = hook(params, opt_state, caches, new_xplan)
+        else:
+            xe = exchange_arrays(new_xplan)
+            out = self.jit_steps["pipelined"](params, opt_state, caches,
+                                              self._state["xarr"], xe)
+            self._state["xarr"] = xe
         self.xplan = new_xplan
-        self._state["xarr"] = xe
         return out
 
     def lower_step(self, name: str, params, opt_state, caches):
@@ -295,14 +325,21 @@ class SimRuntime:
         "pipelined"``) with the installed plan's exchange arrays — for HLO
         inspection/cost tooling."""
         xa = self._state["xarr"]
+        if self.features == "host":
+            hd = self._state["_dummy_hostd"](name)
+            return self.jit_steps[name].lower(params, opt_state, caches,
+                                              hd, self._state["l0loc"],
+                                              xa, xa)
         return self.jit_steps[name].lower(params, opt_state, caches, xa, xa)
 
 
 def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                      opt: Optimizer, exchange_layer0: bool = True,
                      backend: str = "edges", interpret: bool = True,
-                     halo_dtype=None, donate: bool = True
-                     ) -> SimRuntime:
+                     halo_dtype=None, donate: bool = True,
+                     features: str = "device",
+                     host_store: HostFeatureStore | None = None,
+                     prefetch_depth: int = 2) -> SimRuntime:
     """Build the jitted stacked-oracle runtime.
 
     ``exchange_layer0=False`` models pre-replicated input features (they are
@@ -318,6 +355,7 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
     ``halo_dtype="bf16"`` casts every tier's payload before the exchange
     and dequantises on scatter, halving the accounted wire bytes
     (``halo_dtype_bytes`` is threaded into ``train_capgnn``'s accounting).
+    In host mode the same cast compresses the PCIe staging payloads.
 
     ``donate=True`` (default) donates ``(params, opt_state, caches)`` into
     the jitted steps, so the optimizer and cache buffers are updated
@@ -325,13 +363,36 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
     treat the arguments of a step call as consumed — re-use the *returned*
     state (pass ``donate=False`` for branch-and-compare experiments that
     deliberately re-run a step from the same state).
+
+    ``features="host"`` is the out-of-core mode: the halo feature table
+    never lives on device.  Layer 0's local-tier rows are staged once per
+    plan (``l0loc``, the genuinely device-cached JACA local tier); the
+    uncached+global layer-0 rows ride a double-buffered
+    :class:`~repro.dist.host_store.HostFeatureStore` staging ring whose
+    next fetch is ``device_put``-in-flight while the current step runs;
+    the per-exchange-layer global buffers live host-side between steps
+    (written back on refresh, staged h2d for the stale reads).  The plan
+    must carry a host tier (``build_exchange_plan`` always emits one).
+    ``host_store`` injects a pre-built store (shared with a serve engine);
+    by default one is built over ``sp.halo_feats``.
     """
     p, ni, nh = sp.num_parts, sp.n_inner_max, sp.n_halo_max
     hdt, hd_bytes = halo_dtype_info(halo_dtype)
     layers = cfg.num_layers
+    if features not in RUNTIME_FEATURES:
+        raise ValueError(f"unknown features mode {features!r}; "
+                         f"expected one of {RUNTIME_FEATURES}")
+    host_mode = features == "host"
 
     feats = jnp.asarray(sp.feats)
-    halo_feats = jnp.asarray(sp.halo_feats)
+    if host_mode:
+        store = host_store if host_store is not None else HostFeatureStore(
+            sp.halo_feats, halo_dtype=halo_dtype,
+            prefetch_depth=prefetch_depth)
+        halo_feats = None      # the halo table never touches device memory
+    else:
+        store = None
+        halo_feats = jnp.asarray(sp.halo_feats)
     labels = jnp.asarray(sp.labels).reshape(-1)
     masks = {k: jnp.asarray(m).reshape(-1)
              for k, m in (("train", sp.train_mask), ("val", sp.val_mask),
@@ -345,17 +406,35 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             return _layer_apply(cfg, lp, adj, h_local, ni, is_last)
         return jax.vmap(one)(adj_leaves, h, halo)
 
-    def forward(params, caches, xr, xe, use_stale: bool):
+    def forward(params, caches, xr, xe, use_stale: bool,
+                hostd=None, l0loc=None):
         """``xr`` is the installed (read) plan: stale caches are scattered
         at its positions and its uncached tier is exchanged.  ``xe`` is the
         emit plan whose tier rows are pulled fresh — identical to ``xr``
         except on a plan-transition step, where the fresh pulls prefetch
-        the *next* plan's rows."""
+        the *next* plan's rows.
+
+        In host mode the layer-0 halo is assembled on device from two
+        staged payloads instead of a resident table: ``l0loc`` (the
+        per-plan device-cached local tier) scattered at the local tier's
+        positions, and ``hostd["l0"]`` (this step's double-buffered host
+        fetch) scattered at the host tier's positions (uncached ∪ global
+        membership).  Stale global reads come from ``hostd["gl"]`` — the
+        staged host-resident buffers — rather than a device cache."""
         h = feats
         fresh = {"local": [], "global": []}
         for li, lp in enumerate(params):
             if li == 0:
-                halo = halo_feats
+                if host_mode:
+                    halo = jnp.zeros((p, nh, h.shape[-1]), h.dtype)
+                    halo = _scatter(halo, xr["loc"]["recv_halo_pos"],
+                                    l0loc.astype(h.dtype),
+                                    xr["loc"]["recv_valid"])
+                    halo = _scatter(halo, xr["host"]["feat_pos"],
+                                    hostd["l0"].astype(h.dtype),
+                                    xr["host"]["feat_valid"])
+                else:
+                    halo = halo_feats
             else:
                 d = h.shape[-1]
                 halo = jnp.zeros((p, nh, d), h.dtype)
@@ -366,7 +445,11 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                 buf_fresh = _build_global(xe["gl"], h, hdt)
                 if use_stale:
                     loc_use, loc_t = caches["local"][li - 1], xr["loc"]
-                    buf_use, gl_t = caches["global"][li - 1], xr["gl"]
+                    if host_mode:
+                        buf_use = hostd["gl"][li - 1].astype(h.dtype)
+                    else:
+                        buf_use = caches["global"][li - 1]
+                    gl_t = xr["gl"]
                 else:
                     loc_use, loc_t = loc_fresh, xe["loc"]
                     buf_use, gl_t = buf_fresh, xe["gl"]
@@ -378,56 +461,103 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             h = layer_all(lp, h, halo, is_last=(li == layers - 1))
         return h, fresh
 
-    def loss_fn(params, caches, xr, xe, use_stale: bool):
-        logits, fresh = forward(params, caches, xr, xe, use_stale)
+    def loss_fn(params, caches, xr, xe, use_stale: bool,
+                hostd=None, l0loc=None):
+        logits, fresh = forward(params, caches, xr, xe, use_stale,
+                                hostd, l0loc)
         flat = logits.reshape(-1, logits.shape[-1])
         loss = cross_entropy_loss(flat, labels, masks["train"])
         return loss, (flat, fresh)
 
+    def _metrics_and_caches(loss, flat, fresh, caches, stale_gl,
+                            use_stale: bool, emit_fresh: bool):
+        metrics = {"loss": loss,
+                   "acc": accuracy(flat, labels, masks["train"])}
+        # Drift compares fresh rows against the stale source of this step.
+        # In host mode that source is the staged host buffer (``stale_gl``
+        # from hostd) — on a host *refresh* there is no staged stale
+        # global at all, so the drift keys are simply not emitted.
+        if emit_fresh and (use_stale or not host_mode):
+            pairs = list(zip(fresh["local"] + fresh["global"],
+                             caches["local"] + stale_gl))
+            drifts = [jnp.max(jnp.abs(a - b)) for a, b in pairs
+                      if a.size]
+            metrics["drift"] = (jnp.max(jnp.stack(drifts)) if drifts
+                                else jnp.zeros(()))
+            # per-row drift stats for the drift-aware planner policy
+            # (max over layers and feature dim; meaningful when xr == xe)
+            n_ex = len(fresh["local"])
+            if n_ex:
+                loc_rows = [jnp.max(jnp.abs(a - b), axis=-1)
+                            for a, b in pairs[:n_ex]]
+                gl_rows = [jnp.max(jnp.abs(a - b), axis=-1)
+                           for a, b in pairs[n_ex:]]
+                metrics["drift_local_rows"] = jnp.max(
+                    jnp.stack(loc_rows), axis=0)          # [P, Rloc]
+                metrics["drift_global_rows"] = jnp.max(
+                    jnp.stack(gl_rows), axis=0)           # [G]
+        if host_mode:
+            out_caches = {"local": (fresh["local"] if emit_fresh
+                                    else caches["local"]),
+                          "global": []}
+        else:
+            out_caches = fresh if emit_fresh else caches
+        return metrics, out_caches
+
     def make_step(use_stale: bool, emit_fresh: bool):
+        if host_mode:
+            def step(params, opt_state, caches, hostd, l0loc, xr, xe):
+                (loss, (flat, fresh)), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, caches, xr, xe,
+                                           use_stale, hostd, l0loc)
+                new_params, new_state = opt.update(grads, opt_state, params)
+                stale_gl = ([g.astype(jnp.float32) for g in hostd["gl"]]
+                            if use_stale else [])
+                metrics, out_caches = _metrics_and_caches(
+                    loss, flat, fresh, caches, stale_gl,
+                    use_stale, emit_fresh)
+                if emit_fresh:
+                    # emitted global buffers go back to the host store
+                    # (d2h writeback by the caller), not into device caches
+                    return (new_params, new_state, out_caches,
+                            fresh["global"], metrics)
+                return new_params, new_state, out_caches, metrics
+            # the staged hostd payloads are single-use but their shapes
+            # never match a step output, so donating them would only warn;
+            # their buffers free when the wrapper drops the last reference
+            return jax.jit(step,
+                           donate_argnums=(0, 1, 2) if donate else ())
+
         def step(params, opt_state, caches, xr, xe):
             (loss, (flat, fresh)), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, caches, xr, xe, use_stale)
             new_params, new_state = opt.update(grads, opt_state, params)
-            metrics = {"loss": loss,
-                       "acc": accuracy(flat, labels, masks["train"])}
-            if emit_fresh:
-                pairs = list(zip(fresh["local"] + fresh["global"],
-                                 caches["local"] + caches["global"]))
-                drifts = [jnp.max(jnp.abs(a - b)) for a, b in pairs
-                          if a.size]
-                metrics["drift"] = (jnp.max(jnp.stack(drifts)) if drifts
-                                    else jnp.zeros(()))
-                # per-row drift stats for the drift-aware planner policy
-                # (max over layers and feature dim; meaningful when xr == xe)
-                n_ex = len(fresh["local"])
-                if n_ex:
-                    loc_rows = [jnp.max(jnp.abs(a - b), axis=-1)
-                                for a, b in pairs[:n_ex]]
-                    gl_rows = [jnp.max(jnp.abs(a - b), axis=-1)
-                               for a, b in pairs[n_ex:]]
-                    metrics["drift_local_rows"] = jnp.max(
-                        jnp.stack(loc_rows), axis=0)          # [P, Rloc]
-                    metrics["drift_global_rows"] = jnp.max(
-                        jnp.stack(gl_rows), axis=0)           # [G]
-            out_caches = fresh if emit_fresh else caches
+            metrics, out_caches = _metrics_and_caches(
+                loss, flat, fresh, caches, caches["global"],
+                use_stale, emit_fresh)
             return new_params, new_state, out_caches, metrics
         # steady-state steps rewrite (params, opt_state, caches) in place;
         # the exchange arrays (xr, xe) are NOT donated — they are reused
         # across steps and swapped wholesale by set_plan/step_transition
         return jax.jit(step, donate_argnums=(0, 1, 2) if donate else ())
 
-    caches0 = init_caches(cfg, xplan, p)
+    caches0 = init_caches(cfg, xplan, p, features=features)
 
-    def _fwd_fresh(params, xr):
-        logits, _ = forward(params, caches0, xr, xr, False)
-        return logits
+    if host_mode:
+        def _fwd_fresh(params, hostd, l0loc, xr):
+            logits, _ = forward(params, caches0, xr, xr, False,
+                                hostd, l0loc)
+            return logits
+    else:
+        def _fwd_fresh(params, xr):
+            logits, _ = forward(params, caches0, xr, xr, False)
+            return logits
 
     jit_steps = {"refresh": make_step(False, True),
                  "cached": make_step(True, False),
                  "pipelined": make_step(True, True),
                  "forward": jax.jit(_fwd_fresh)}
-    state = {"xarr": exchange_arrays(xplan)}
+    state = {"xarr": exchange_arrays(xplan, include_host=host_mode)}
 
     def wrap(name):
         def stepper(params, opt_state, caches):
@@ -435,8 +565,145 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             return jit_steps[name](params, opt_state, caches, xa, xa)
         return stepper
 
-    def forward_fresh(params):
-        return jit_steps["forward"](params, state["xarr"])
+    if host_mode:
+        n_ex = layers - 1
+        ex_dims = list(cfg.feat_dims[1:layers])
+        parts_idx = np.arange(p)[:, None]
+        staged_dtype = hdt if hdt is not None else jnp.float32
+
+        def _host_np(xp: ExchangePlan) -> dict:
+            """Host-side gather programs of one plan (plain numpy — these
+            index the host table, they never ride into the jitted step)."""
+            return {"feat_pos": np.asarray(xp.host.feat_pos, np.int64),
+                    "feat_valid": np.asarray(xp.host.feat_valid, bool),
+                    "loc_pos": np.asarray(xp.local.recv_halo_pos, np.int64),
+                    "loc_valid": np.asarray(xp.local.recv_valid, bool),
+                    "gl_rows": int(xp.glob.n_unique)}
+
+        def _stage_l0loc():
+            """(Re)stage the layer-0 local-tier rows — the device-cached
+            slice of the host table.  One accounted fetch per plan install,
+            then resident until the next re-plan."""
+            hn = state["hostnp"]
+            sf = store.stage_rows((parts_idx, hn["loc_pos"]),
+                                  valid=hn["loc_valid"])
+            store.account_fetch(sf)
+            state["l0loc"] = sf.array
+
+        def _stage_l0():
+            hn = state["hostnp"]
+            return store.stage_rows((parts_idx, hn["feat_pos"]),
+                                    valid=hn["feat_valid"])
+
+        def _take_l0():
+            """Pop the oldest in-flight layer-0 fetch (or stage one cold)
+            and account it — accounting happens at consumption, so flushed
+            prefetches never count."""
+            ring = state["l0_ring"]
+            sf = ring.popleft() if ring else _stage_l0()
+            store.account_fetch(sf)
+            return sf.array
+
+        def _prefetch_l0():
+            """Refill the double buffer: keep the *next* step's host rows
+            ``device_put``-in-flight while the current step computes."""
+            ring = state["l0_ring"]
+            while len(ring) < max(1, store.prefetch_depth - 1):
+                ring.append(_stage_l0())
+
+        def _take_gl():
+            out = []
+            for li in range(n_ex):
+                sf = store.stage_buf(li)
+                store.account_fetch(sf)
+                out.append(sf.array)
+            return out
+
+        def _writeback(host_out):
+            for li, buf in enumerate(host_out):
+                store.write_buf(li, buf, state["hostnp"]["gl_rows"])
+
+        state["hostnp"] = _host_np(xplan)
+        state["l0_ring"] = deque()
+        _stage_l0loc()
+        for li, d in enumerate(ex_dims):
+            store.init_buf(li, (xplan.glob.buf_size, d),
+                           xplan.glob.n_unique)
+
+        def wrap_host(name):
+            use_gl = name in ("cached", "pipelined")
+            emit = name in ("refresh", "pipelined")
+
+            def stepper(params, opt_state, caches):
+                hostd = {"l0": _take_l0()}
+                if use_gl:
+                    hostd["gl"] = _take_gl()
+                xa = state["xarr"]
+                out = jit_steps[name](params, opt_state, caches, hostd,
+                                      state["l0loc"], xa, xa)
+                if emit:
+                    new_p, new_s, out_caches, host_out, metrics = out
+                    _writeback(host_out)
+                    out = (new_p, new_s, out_caches, metrics)
+                _prefetch_l0()
+                return out
+            return stepper
+
+        def _set_plan(xp: ExchangePlan):
+            state["xarr"] = exchange_arrays(xp, include_host=True)
+            state["hostnp"] = _host_np(xp)
+            # old-plan prefetches are flushed *unaccounted* — they were
+            # never consumed, so staged == consumed stays exact
+            state["l0_ring"].clear()
+            _stage_l0loc()
+            _prefetch_l0()
+            # the host-resident global buffers keep their (old-tiering)
+            # content; shapes are plan-invariant under the capacity-padded
+            # layout and the next step after set_plan must be a refresh
+        state["_set_plan"] = _set_plan
+
+        def _transition(params, opt_state, caches, new_xp: ExchangePlan):
+            # old plan's stale tiers are staged on the OLD layout...
+            hostd = {"l0": _take_l0(), "gl": _take_gl()}
+            xr = state["xarr"]
+            xe = exchange_arrays(new_xp, include_host=True)
+            new_p, new_s, out_caches, host_out, metrics = (
+                jit_steps["pipelined"](params, opt_state, caches, hostd,
+                                       state["l0loc"], xr, xe))
+            state["xarr"] = xe
+            state["hostnp"] = _host_np(new_xp)
+            # ...while the emitted buffers carry the NEW plan's membership
+            _writeback(host_out)
+            state["l0_ring"].clear()
+            _stage_l0loc()
+            _prefetch_l0()
+            return new_p, new_s, out_caches, metrics
+        state["_transition"] = _transition
+
+        def _dummy_hostd(name: str) -> dict:
+            """Zero payloads with the staged shapes/dtypes — for
+            ``lower_step`` HLO inspection only."""
+            w = state["hostnp"]["feat_pos"].shape[1]
+            hd = {"l0": jnp.zeros((p, w, cfg.feat_dims[0]), staged_dtype)}
+            if name in ("cached", "pipelined"):
+                hd["gl"] = [jnp.zeros((xplan.glob.buf_size, d),
+                                      staged_dtype) for d in ex_dims]
+            return hd
+        state["_dummy_hostd"] = _dummy_hostd
+
+        def forward_fresh(params):
+            sf = _stage_l0()
+            store.account_fetch(sf)
+            return jit_steps["forward"](params, {"l0": sf.array},
+                                        state["l0loc"], state["xarr"])
+
+        step_wrap = wrap_host
+        _prefetch_l0()
+    else:
+        def forward_fresh(params):
+            return jit_steps["forward"](params, state["xarr"])
+
+        step_wrap = wrap
 
     def evaluate(params, split: str = "val"):
         flat = forward_fresh(params).reshape(-1, cfg.out_dim)
@@ -445,17 +712,20 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                 float(accuracy(flat, labels, m)))
 
     comm_dims = list(cfg.feat_dims[:layers])
-    if not exchange_layer0:
+    if not exchange_layer0 or host_mode:
+        # host mode: layer-0 rows arrive over PCIe from the host store
+        # (accounted by the store), not over the inter-worker wire
         comm_dims = comm_dims[1:]
 
     return SimRuntime(cfg=cfg, xplan=xplan, comm_dims=comm_dims,
                       forward_fresh=forward_fresh,
-                      step_refresh=wrap("refresh"),
-                      step_cached=wrap("cached"),
-                      step_pipelined=wrap("pipelined"),
+                      step_refresh=step_wrap("refresh"),
+                      step_cached=step_wrap("cached"),
+                      step_pipelined=step_wrap("pipelined"),
                       evaluate=evaluate,
                       caches0=caches0, backend=backend,
                       halo_dtype_bytes=hd_bytes,
+                      features=features, host_store=store,
                       jit_steps=jit_steps, _state=state, stacked=sp)
 
 
@@ -476,6 +746,11 @@ class TrainReport:
     replan_events: int = 0
     hit_rate: float | None = None    # planner-observed (adaptive runs only)
     final_opt_state: object = None   # for checkpoint/resume (launch.train)
+    # out-of-core (features="host") traffic over the training loop, from
+    # the store's consumption-driven counters; zero in device mode
+    host_fetch_rows: int = 0
+    host_fetch_bytes: int = 0
+    host_writeback_bytes: int = 0
 
 
 def _step_rows(x_read: ExchangePlan, x_emit: ExchangePlan,
@@ -525,7 +800,10 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     params = params0 if params0 is not None else init_gnn(
         jax.random.PRNGKey(seed), cfg)
     opt_state = opt_state0 if opt_state0 is not None else opt.init(params)
-    caches = init_caches(cfg, xplan, num_parts)
+    caches = init_caches(cfg, xplan, num_parts,
+                         features=getattr(runtime, "features", "device"))
+    store = getattr(runtime, "host_store", None)
+    store_snap = store.snapshot() if store is not None else None
     dims = getattr(runtime, "comm_dims", list(cfg.feat_dims[:cfg.num_layers]))
     # actual wire width of one halo payload entry (2 under halo_dtype=bf16);
     # the vanilla baseline ships the same payload dtype, so the reduction
@@ -585,6 +863,9 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
             val_acc.append(runtime.evaluate(params, "val")[1])
     wall = time.perf_counter() - t0
 
+    # note: eval_every runs also consume accounted host fetches, so pin
+    # eval_every=0 when asserting the plan-rows == staged-rows identity
+    hostd = store.delta(store_snap) if store is not None else {}
     report = TrainReport(
         losses=losses, val_acc=val_acc, comm_bytes=comm,
         comm_bytes_vanilla=vanilla,
@@ -592,5 +873,8 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
         refresh_steps=refresh_steps, cached_steps=epochs - refresh_steps,
         wall_time_s=wall, replan_events=replan_events,
         hit_rate=planner.hit_rate() if planner is not None else None,
-        final_opt_state=opt_state)
+        final_opt_state=opt_state,
+        host_fetch_rows=int(hostd.get("fetch_rows", 0)),
+        host_fetch_bytes=int(hostd.get("fetch_bytes", 0)),
+        host_writeback_bytes=int(hostd.get("writeback_bytes", 0)))
     return params, report

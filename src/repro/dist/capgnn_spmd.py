@@ -44,11 +44,13 @@ for compatibility with pre-``jax.shard_map`` releases.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 if hasattr(jax, "shard_map"):            # jax >= 0.5 exports it at top level
@@ -60,8 +62,10 @@ from repro.kernels.ops import pack_rows
 from repro.models.gnn import GNNConfig, _layer_apply, accuracy, cross_entropy_loss
 from repro.optim import Optimizer
 
-from .capgnn_sim import halo_dtype_info, init_caches, make_adj_builder
+from .capgnn_sim import (RUNTIME_FEATURES, halo_dtype_info, init_caches,
+                         make_adj_builder)
 from .exchange import ExchangePlan, StackedParts
+from .host_store import HostFeatureStore
 
 __all__ = ["make_spmd_runtime", "SpmdRuntime", "TRANSPORTS",
            "spmd_exchange_arrays"]
@@ -69,12 +73,15 @@ __all__ = ["make_spmd_runtime", "SpmdRuntime", "TRANSPORTS",
 TRANSPORTS = ("allgather", "p2p")
 
 
-def spmd_exchange_arrays(xplan: ExchangePlan, p2p: bool) -> dict:
+def spmd_exchange_arrays(xplan: ExchangePlan, p2p: bool,
+                         include_host: bool = False) -> dict:
     """One plan's exchange index arrays in the SPMD runtime's layout:
     ``"sh"`` leaves are ``[P, ...]`` and sharded over the partition axis,
     ``"rep"`` leaves (the global buffer's source addressing) replicated.
     The jitted steps take this pytree as a traced argument, so a
-    capacity-padded re-plan swaps in without retracing."""
+    capacity-padded re-plan swaps in without retracing.  ``include_host``
+    adds the layer-0 host-tier scatter program (sharded like the other
+    per-worker tiers) for the ``features="host"`` runtimes."""
 
     def tier_arrays(t):
         d = {"send_row": t.send_row,
@@ -94,6 +101,12 @@ def spmd_exchange_arrays(xplan: ExchangePlan, p2p: bool) -> dict:
                  "read_pos": xplan.glob.read_pos,
                  "read_buf_idx": xplan.glob.read_buf_idx,
                  "read_valid": xplan.glob.read_valid}}
+    if include_host:
+        if xplan.host is None:
+            raise ValueError("features='host' needs a plan with a host "
+                             "tier (rebuild via build_exchange_plan)")
+        sh["host"] = {"feat_pos": xplan.host.feat_pos.astype(np.int32),
+                      "feat_valid": xplan.host.feat_valid}
     rep = {"g_src_part": xplan.glob.src_part,
            "g_src_slot": xplan.glob.src_slot,
            "g_buf_valid": xplan.glob.buf_valid}
@@ -180,6 +193,10 @@ class SpmdRuntime:
     backend: str = "edges"
     transport: str = "allgather"
     halo_dtype_bytes: int = 4
+    # feature residency — see :func:`repro.dist.make_sim_runtime`
+    features: str = "device"
+    host_store: HostFeatureStore | None = dataclasses.field(default=None,
+                                                            repr=False)
     jit_steps: dict | None = dataclasses.field(default=None, repr=False)
     _state: dict | None = dataclasses.field(default=None, repr=False)
     # the stacked layout this runtime was built over — kept for padded-row
@@ -200,22 +217,33 @@ class SpmdRuntime:
     def set_plan(self, xplan: ExchangePlan) -> None:
         """Install a re-ranked plan (slot-stable capacity-padded layout:
         no retrace).  Cache content still follows the old tiering — the
-        next step must refresh, or come from :meth:`step_transition`."""
+        next step must refresh, or come from :meth:`step_transition`.
+        Host mode additionally flushes the staging ring (unaccounted) and
+        restages the layer-0 local tier for the new plan."""
         self.xplan = xplan
-        self._state["xarr"] = spmd_exchange_arrays(
-            xplan, p2p=self.transport == "p2p")
+        hook = (self._state or {}).get("_set_plan")
+        if hook is not None:
+            hook(xplan)
+        else:
+            self._state["xarr"] = spmd_exchange_arrays(
+                xplan, p2p=self.transport == "p2p")
 
     def step_transition(self, params, opt_state, caches,
                         new_xplan: ExchangePlan):
         """Pipelined plan switch: stale consumption + uncached exchange
         run on the installed plan while the refresh rings prefetch the
         **new** plan's tier rows; the emitted caches are laid out for
-        ``new_xplan``, which becomes the installed plan."""
-        xe = spmd_exchange_arrays(new_xplan, p2p=self.transport == "p2p")
-        out = self.jit_steps["pipelined"](params, opt_state, caches,
-                                          self._state["xarr"], xe)
+        ``new_xplan``, which becomes the installed plan.  Host-mode
+        semantics mirror :meth:`repro.dist.SimRuntime.step_transition`."""
+        hook = (self._state or {}).get("_transition")
+        if hook is not None:
+            out = hook(params, opt_state, caches, new_xplan)
+        else:
+            xe = spmd_exchange_arrays(new_xplan, p2p=self.transport == "p2p")
+            out = self.jit_steps["pipelined"](params, opt_state, caches,
+                                              self._state["xarr"], xe)
+            self._state["xarr"] = xe
         self.xplan = new_xplan
-        self._state["xarr"] = xe
         return out
 
     def lower_step(self, name: str, params, opt_state, caches):
@@ -223,6 +251,11 @@ class SpmdRuntime:
         "pipelined"``) with the installed plan's exchange arrays — for HLO
         inspection/cost tooling."""
         xa = self._state["xarr"]
+        if self.features == "host":
+            hd = self._state["_dummy_hostd"](name)
+            return self.jit_steps[name].lower(params, opt_state, caches,
+                                              hd, self._state["l0loc"],
+                                              xa, xa)
         return self.jit_steps[name].lower(params, opt_state, caches, xa, xa)
 
 
@@ -231,7 +264,9 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                       exchange_layer0: bool = True, backend: str = "edges",
                       interpret: bool = True, transport: str = "allgather",
                       halo_dtype=None, donate: bool = True,
-                      pallas_pack: bool = False) -> SpmdRuntime:
+                      pallas_pack: bool = False, features: str = "device",
+                      host_store: HostFeatureStore | None = None,
+                      prefetch_depth: int = 2) -> SpmdRuntime:
     """``backend`` mirrors :func:`make_sim_runtime`: the per-device local
     aggregation runs through the edge-list segment-sum, the Pallas
     blocked-ELL kernel, or the hybrid ELL+COO pack — the exchange
@@ -245,10 +280,22 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
     jitted steps — re-use the returned state, not the arguments.
     ``pallas_pack=True`` routes the per-peer payload pack through the
     Pallas :func:`~repro.kernels.ops.gather_rows` kernel (TPU path).
+
+    ``features="host"`` mirrors :func:`make_sim_runtime`'s out-of-core
+    mode on the mesh: the halo table never ships to the devices — the
+    layer-0 local tier is staged once per plan (sharded over the
+    partition axis), the uncached+global layer-0 rows ride the store's
+    double-buffered staging ring (the next step's ``device_put`` is in
+    flight while the current step runs), and the per-layer global
+    buffers are host-resident between steps (d2h writeback on refresh,
+    replicated h2d stage for the stale reads).
     """
     if transport not in TRANSPORTS:
         raise ValueError(f"unknown transport {transport!r}; "
                          f"expected one of {TRANSPORTS}")
+    if features not in RUNTIME_FEATURES:
+        raise ValueError(f"unknown features mode {features!r}; "
+                         f"expected one of {RUNTIME_FEATURES}")
     names = (axis,) if isinstance(axis, str) else tuple(axis)
     mesh_size = int(np.prod([mesh.shape[n] for n in names]))
     p, ni, nh = sp.num_parts, sp.n_inner_max, sp.n_halo_max
@@ -260,18 +307,27 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
     adj_leaves, build_adj = make_adj_builder(sp, backend, interpret)
     hdt, hd_bytes = halo_dtype_info(halo_dtype)
     p2p = transport == "p2p"
+    host_mode = features == "host"
+    if host_mode:
+        store = host_store if host_store is not None else HostFeatureStore(
+            sp.halo_feats, halo_dtype=halo_dtype,
+            prefetch_depth=prefetch_depth)
+    else:
+        store = None
 
     # Sharded batch: leading dim = partition.  The exchange index arrays
     # are NOT baked here — they travel as step arguments (xr/xe pytrees
     # from spmd_exchange_arrays) so online re-planning swaps them without
-    # retracing.
+    # retracing.  In host mode the halo feature table stays host-side.
     data_sh = {
-        "feats": sp.feats, "halo_feats": sp.halo_feats,
+        "feats": sp.feats,
         "labels": sp.labels.astype(np.int32),
         "train_mask": sp.train_mask, "val_mask": sp.val_mask,
         "test_mask": sp.test_mask,
         "adj": adj_leaves,
     }
+    if not host_mode:
+        data_sh["halo_feats"] = sp.halo_feats
     data_sh = jax.tree.map(jnp.asarray, data_sh)
 
     caches_spec = {"local": P(names), "global": P()}
@@ -281,7 +337,7 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         return x.astype(hdt) if hdt is not None else x
 
     def _device_forward(params, caches, dsh, xr, xe, use_stale: bool,
-                        defer_refresh: bool = False):
+                        defer_refresh: bool = False, hostd=None, l0loc=None):
         """Per-device forward. ``dsh``/``x*["sh"]`` leaves carry a leading
         dim of 1.
 
@@ -296,9 +352,14 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         boundary, rotated once per layer while the SpMM computes, and
         finalised after the last layer — the layer math itself consumes
         the stale caches, so the rings never block it.
+
+        In host mode the layer-0 halo is scattered from the staged
+        payloads (``l0loc`` + ``hostd["l0"]``, sharded like the tiers)
+        and stale global reads come from ``hostd["gl"]`` (replicated
+        stage of the host-resident buffers) — mirroring the oracle.
         """
         feats = dsh["feats"][0]                       # [NI, F]
-        halo0 = dsh["halo_feats"][0]                  # [NH, F]
+        halo0 = None if host_mode else dsh["halo_feats"][0]   # [NH, F]
         adj = build_adj({k: v[0] for k, v in dsh["adj"].items()})
         i_dev = jax.lax.axis_index(names) if p2p else None
 
@@ -355,27 +416,40 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         pending = []   # (dtype, local _PeerRing, global _BufRing)
         for li, lp in enumerate(params):
             if li == 0:
-                halo = halo0
+                if host_mode:
+                    halo = jnp.zeros((nh, feats.shape[-1]), feats.dtype)
+                    loc_t = xr["sh"]["loc"]
+                    halo = scatter(halo, loc_t["recv_halo_pos"][0],
+                                   l0loc[0].astype(feats.dtype),
+                                   loc_t["recv_valid"][0])
+                    ht = xr["sh"]["host"]
+                    halo = scatter(halo, ht["feat_pos"][0],
+                                   hostd["l0"][0].astype(feats.dtype),
+                                   ht["feat_valid"][0])
+                else:
+                    halo = halo0
             else:
                 d = h.shape[-1]
                 halo = jnp.zeros((nh, d), h.dtype)
                 un = xr["sh"]["un"]
                 halo = scatter(halo, un["recv_halo_pos"][0], pull(un, h),
                                un["recv_valid"][0])
+                stale_gl = (hostd["gl"][li - 1].astype(h.dtype) if host_mode
+                            else caches["global"][li - 1]) if use_stale else None
                 if defer_refresh and p2p:
                     # issue this boundary's refresh rings on the EMIT plan;
                     # consume stale through the READ plan
                     pending.append((h.dtype, peer_ring(xe["sh"]["loc"], h),
                                     buf_ring(xe, h)))
                     loc_use, loc_t = caches["local"][li - 1][0], xr["sh"]["loc"]
-                    buf_use, gl_t = caches["global"][li - 1], xr["sh"]["gl"]
+                    buf_use, gl_t = stale_gl, xr["sh"]["gl"]
                 else:
                     loc_fresh = pull(xe["sh"]["loc"], h)
                     buf_fresh = build_global(xe, h)
                     if use_stale:
                         loc_use, loc_t = (caches["local"][li - 1][0],
                                           xr["sh"]["loc"])
-                        buf_use, gl_t = caches["global"][li - 1], xr["sh"]["gl"]
+                        buf_use, gl_t = stale_gl, xr["sh"]["gl"]
                     else:
                         loc_use, loc_t = loc_fresh, xe["sh"]["loc"]
                         buf_use, gl_t = buf_fresh, xe["sh"]["gl"]
@@ -400,7 +474,7 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         return h, fresh
 
     def _device_loss(params, caches, dsh, xr, xe, use_stale: bool,
-                     defer_refresh: bool):
+                     defer_refresh: bool, hostd=None, l0loc=None):
         """This device's share of the global mean loss.  The cross-device
         ``psum`` stays OUTSIDE the differentiated function: under
         ``shard_map`` the transpose of an in-loss ``psum`` is another
@@ -409,7 +483,8 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         this with an sgd step, where adam's scale-invariant first step
         cannot mask it)."""
         logits, fresh = _device_forward(params, caches, dsh, xr, xe,
-                                        use_stale, defer_refresh)
+                                        use_stale, defer_refresh,
+                                        hostd, l0loc)
         labels = dsh["labels"][0]
         mask = dsh["train_mask"][0]
         logp = jax.nn.log_softmax(logits, -1)
@@ -418,10 +493,12 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
 
     def _make_step(use_stale: bool, emit_fresh: bool,
                    defer_refresh: bool = False):
-        def device_step(params, opt_state, caches, dsh, xr, xe):
+        def device_step(params, opt_state, caches, dsh, xr, xe,
+                        hostd=None, l0loc=None):
             (loss, (logits, fresh)), grads = jax.value_and_grad(
                 _device_loss, has_aux=True)(params, caches, dsh, xr, xe,
-                                            use_stale, defer_refresh)
+                                            use_stale, defer_refresh,
+                                            hostd, l0loc)
             loss = jax.lax.psum(loss, names)
             grads = jax.lax.psum(grads, names)
             new_params, new_state = opt.update(grads, opt_state, params)
@@ -430,9 +507,13 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             correct = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
             acc = jax.lax.psum(jnp.sum(correct * mask), names) / total_train
             metrics = {"loss": loss, "acc": acc}
-            if emit_fresh:
+            # host refresh has no staged stale global to drift against —
+            # the keys are not emitted there (mirrors the oracle runtime)
+            if emit_fresh and (use_stale or not host_mode):
+                stale_gl = ([g.astype(jnp.float32) for g in hostd["gl"]]
+                            if host_mode else caches["global"])
                 pairs = list(zip(fresh["local"] + fresh["global"],
-                                 caches["local"] + caches["global"]))
+                                 caches["local"] + stale_gl))
                 drifts = [jnp.max(jnp.abs(a - b)) for a, b in pairs
                           if a.size]
                 local_max = (jnp.max(jnp.stack(drifts)) if drifts
@@ -448,15 +529,46 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                         jnp.max(jnp.stack(
                             [jnp.max(jnp.abs(a - b), axis=-1)
                              for a, b in pairs[n_ex:]]), axis=0), names)
-            out_caches = fresh if emit_fresh else caches
+            if host_mode:
+                out_caches = {"local": (fresh["local"] if emit_fresh
+                                        else caches["local"]),
+                              "global": []}
+            else:
+                out_caches = fresh if emit_fresh else caches
+            if host_mode and emit_fresh:
+                # fresh global buffers return to the host store (d2h by
+                # the wrapper), not into replicated device caches
+                return (new_params, new_state, out_caches,
+                        fresh["global"], metrics)
             return new_params, new_state, out_caches, metrics
 
         mspec = {"loss": P(), "acc": P()}
-        if emit_fresh and layers > 1:
+        emit_drift = emit_fresh and (use_stale or not host_mode)
+        if emit_drift and layers > 1:
             mspec.update(drift=P(), drift_local_rows=P(names),
                          drift_global_rows=P())
-        elif emit_fresh:
+        elif emit_drift:
             mspec["drift"] = P()
+        host_caches_spec = {"local": P(names), "global": P()}
+        if host_mode:
+            hostd_spec = ({"l0": P(names), "gl": P()} if use_stale
+                          else {"l0": P(names)})
+            out_specs = (P(), P(), host_caches_spec, mspec)
+            if emit_fresh:
+                out_specs = (P(), P(), host_caches_spec, P(), mspec)
+            sm = shard_map(
+                device_step, mesh=mesh,
+                in_specs=(P(), P(), caches_spec, P(names), xarr_spec,
+                          xarr_spec, hostd_spec, P(names)),
+                out_specs=out_specs, check_rep=False)
+
+            def step(params, opt_state, caches, hostd, l0loc, xr, xe):
+                return sm(params, opt_state, caches, data_sh, xr, xe,
+                          hostd, l0loc)
+            # the staged hostd payloads are single-use but never match an
+            # output shape, so they are not donated (mirrors the oracle)
+            return jax.jit(step, donate_argnums=(0, 1, 2) if donate else ())
+
         sm = shard_map(
             device_step, mesh=mesh,
             in_specs=(P(), P(), caches_spec, P(names), xarr_spec, xarr_spec),
@@ -469,21 +581,38 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         # the exchange arrays (xr, xe) are reused across steps, not donated
         return jax.jit(step, donate_argnums=(0, 1, 2) if donate else ())
 
-    def _device_fwd_fresh(params, caches, dsh, xr):
-        logits, _ = _device_forward(params, caches, dsh, xr, xr, False)
-        return logits[None]
+    if host_mode:
+        def _device_fwd_fresh(params, caches, dsh, xr, hostd, l0loc):
+            logits, _ = _device_forward(params, caches, dsh, xr, xr, False,
+                                        hostd=hostd, l0loc=l0loc)
+            return logits[None]
 
-    sm_fwd = shard_map(_device_fwd_fresh, mesh=mesh,
-                       in_specs=(P(), caches_spec, P(names), xarr_spec),
-                       out_specs=P(names), check_rep=False)
-    caches0 = init_caches(cfg, xplan, p)
+        sm_fwd = shard_map(_device_fwd_fresh, mesh=mesh,
+                           in_specs=(P(), caches_spec, P(names), xarr_spec,
+                                     {"l0": P(names)}, P(names)),
+                           out_specs=P(names), check_rep=False)
+    else:
+        def _device_fwd_fresh(params, caches, dsh, xr):
+            logits, _ = _device_forward(params, caches, dsh, xr, xr, False)
+            return logits[None]
+
+        sm_fwd = shard_map(_device_fwd_fresh, mesh=mesh,
+                           in_specs=(P(), caches_spec, P(names), xarr_spec),
+                           out_specs=P(names), check_rep=False)
+    caches0 = init_caches(cfg, xplan, p, features=features)
 
     jit_steps = {"refresh": _make_step(False, True),
                  "cached": _make_step(True, False),
-                 "pipelined": _make_step(True, True, defer_refresh=p2p),
-                 "forward": jax.jit(
-                     lambda params, xa: sm_fwd(params, caches0, data_sh, xa))}
-    state = {"xarr": spmd_exchange_arrays(xplan, p2p=p2p)}
+                 "pipelined": _make_step(True, True, defer_refresh=p2p)}
+    if host_mode:
+        jit_steps["forward"] = jax.jit(
+            lambda params, hd, l0loc, xa: sm_fwd(params, caches0, data_sh,
+                                                 xa, hd, l0loc))
+    else:
+        jit_steps["forward"] = jax.jit(
+            lambda params, xa: sm_fwd(params, caches0, data_sh, xa))
+    state = {"xarr": spmd_exchange_arrays(xplan, p2p=p2p,
+                                          include_host=host_mode)}
 
     def wrap(name):
         def stepper(params, opt_state, caches):
@@ -491,8 +620,130 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             return jit_steps[name](params, opt_state, caches, xa, xa)
         return stepper
 
-    def forward_fresh(params):
-        return jit_steps["forward"](params, state["xarr"])
+    if host_mode:
+        n_ex = layers - 1
+        ex_dims = list(cfg.feat_dims[1:layers])
+        parts_idx = np.arange(p)[:, None]
+        staged_dtype = hdt if hdt is not None else jnp.float32
+        shard_parts = NamedSharding(mesh, P(names))
+        shard_rep = NamedSharding(mesh, P())
+
+        def _host_np(xp: ExchangePlan) -> dict:
+            return {"feat_pos": np.asarray(xp.host.feat_pos, np.int64),
+                    "feat_valid": np.asarray(xp.host.feat_valid, bool),
+                    "loc_pos": np.asarray(xp.local.recv_halo_pos, np.int64),
+                    "loc_valid": np.asarray(xp.local.recv_valid, bool),
+                    "gl_rows": int(xp.glob.n_unique)}
+
+        def _stage_l0loc():
+            hn = state["hostnp"]
+            sf = store.stage_rows((parts_idx, hn["loc_pos"]),
+                                  valid=hn["loc_valid"], device=shard_parts)
+            store.account_fetch(sf)
+            state["l0loc"] = sf.array
+
+        def _stage_l0():
+            hn = state["hostnp"]
+            return store.stage_rows((parts_idx, hn["feat_pos"]),
+                                    valid=hn["feat_valid"],
+                                    device=shard_parts)
+
+        def _take_l0():
+            ring = state["l0_ring"]
+            sf = ring.popleft() if ring else _stage_l0()
+            store.account_fetch(sf)
+            return sf.array
+
+        def _prefetch_l0():
+            ring = state["l0_ring"]
+            while len(ring) < max(1, store.prefetch_depth - 1):
+                ring.append(_stage_l0())
+
+        def _take_gl():
+            out = []
+            for li in range(n_ex):
+                sf = store.stage_buf(li, device=shard_rep)
+                store.account_fetch(sf)
+                out.append(sf.array)
+            return out
+
+        def _writeback(host_out):
+            for li, buf in enumerate(host_out):
+                store.write_buf(li, buf, state["hostnp"]["gl_rows"])
+
+        state["hostnp"] = _host_np(xplan)
+        state["l0_ring"] = deque()
+        _stage_l0loc()
+        for li, d in enumerate(ex_dims):
+            store.init_buf(li, (xplan.glob.buf_size, d),
+                           xplan.glob.n_unique)
+
+        def wrap_host(name):
+            use_gl = name in ("cached", "pipelined")
+            emit = name in ("refresh", "pipelined")
+
+            def stepper(params, opt_state, caches):
+                hostd = {"l0": _take_l0()}
+                if use_gl:
+                    hostd["gl"] = _take_gl()
+                xa = state["xarr"]
+                out = jit_steps[name](params, opt_state, caches, hostd,
+                                      state["l0loc"], xa, xa)
+                if emit:
+                    new_p, new_s, out_caches, host_out, metrics = out
+                    _writeback(host_out)
+                    out = (new_p, new_s, out_caches, metrics)
+                _prefetch_l0()
+                return out
+            return stepper
+
+        def _set_plan(xp: ExchangePlan):
+            state["xarr"] = spmd_exchange_arrays(xp, p2p=p2p,
+                                                 include_host=True)
+            state["hostnp"] = _host_np(xp)
+            state["l0_ring"].clear()     # flushed, never accounted
+            _stage_l0loc()
+            _prefetch_l0()
+        state["_set_plan"] = _set_plan
+
+        def _transition(params, opt_state, caches, new_xp: ExchangePlan):
+            hostd = {"l0": _take_l0(), "gl": _take_gl()}
+            xr = state["xarr"]
+            xe = spmd_exchange_arrays(new_xp, p2p=p2p, include_host=True)
+            new_p, new_s, out_caches, host_out, metrics = (
+                jit_steps["pipelined"](params, opt_state, caches, hostd,
+                                       state["l0loc"], xr, xe))
+            state["xarr"] = xe
+            state["hostnp"] = _host_np(new_xp)
+            _writeback(host_out)         # new plan's membership
+            state["l0_ring"].clear()
+            _stage_l0loc()
+            _prefetch_l0()
+            return new_p, new_s, out_caches, metrics
+        state["_transition"] = _transition
+
+        def _dummy_hostd(name: str) -> dict:
+            w = state["hostnp"]["feat_pos"].shape[1]
+            hd = {"l0": jnp.zeros((p, w, cfg.feat_dims[0]), staged_dtype)}
+            if name in ("cached", "pipelined"):
+                hd["gl"] = [jnp.zeros((xplan.glob.buf_size, d),
+                                      staged_dtype) for d in ex_dims]
+            return hd
+        state["_dummy_hostd"] = _dummy_hostd
+
+        def forward_fresh(params):
+            sf = _stage_l0()
+            store.account_fetch(sf)
+            return jit_steps["forward"](params, {"l0": sf.array},
+                                        state["l0loc"], state["xarr"])
+
+        step_wrap = wrap_host
+        _prefetch_l0()
+    else:
+        def forward_fresh(params):
+            return jit_steps["forward"](params, state["xarr"])
+
+        step_wrap = wrap
 
     labels_flat = jnp.asarray(sp.labels.astype(np.int32)).reshape(-1)
     masks_flat = {"train": jnp.asarray(sp.train_mask).reshape(-1),
@@ -506,14 +757,17 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                 float(accuracy(flat, labels_flat, m)))
 
     comm_dims = list(cfg.feat_dims[:layers])
-    if not exchange_layer0:
+    if not exchange_layer0 or host_mode:
+        # host mode: layer-0 rows arrive over PCIe from the host store
+        # (accounted by the store), not over the inter-worker wire
         comm_dims = comm_dims[1:]
 
     return SpmdRuntime(cfg=cfg, xplan=xplan, mesh=mesh, axis_names=names,
                        comm_dims=comm_dims, forward_fresh=forward_fresh,
-                       step_refresh=wrap("refresh"),
-                       step_cached=wrap("cached"),
-                       step_pipelined=wrap("pipelined"),
+                       step_refresh=step_wrap("refresh"),
+                       step_cached=step_wrap("cached"),
+                       step_pipelined=step_wrap("pipelined"),
                        evaluate=evaluate, caches0=caches0, backend=backend,
                        transport=transport, halo_dtype_bytes=hd_bytes,
+                       features=features, host_store=store,
                        jit_steps=jit_steps, _state=state, stacked=sp)

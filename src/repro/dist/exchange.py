@@ -58,9 +58,9 @@ from repro.core.jaca import CachePlan
 from repro.data.gnn_data import FullBatchTask
 from repro.graph.partition import PartitionSet
 
-__all__ = ["ExchangeTier", "GlobalTier", "ExchangePlan", "StackedParts",
-           "StackedEllPack", "ExchangeCapacity", "exchange_capacity",
-           "build_exchange_plan", "stack_partitions"]
+__all__ = ["ExchangeTier", "GlobalTier", "HostTier", "ExchangePlan",
+           "StackedParts", "StackedEllPack", "ExchangeCapacity",
+           "exchange_capacity", "build_exchange_plan", "stack_partitions"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,6 +244,35 @@ class GlobalTier:
 
 
 @dataclasses.dataclass(frozen=True)
+class HostTier:
+    """The out-of-core layer-0 fetch program of the ``features="host"``
+    runtimes: per worker, the halo positions whose *input features* are
+    fetched from the host store every step instead of living stacked on
+    device.
+
+    Membership = the uncached tier ∪ the global-tier reads (the rows not
+    held in the worker's device-resident local cache; the local tier's
+    layer-0 rows stay device-cached — ``cal_capacity`` already charges
+    every cached vertex for the input dim).  Same valid-mask/padding
+    contract as the wire tiers: under a capacity-padded plan the width is
+    ``un_recv + glob_read``, so re-plans swap membership as data without
+    changing shapes.
+    """
+    feat_pos: np.ndarray     # [P, W] halo positions staged from host
+    feat_valid: np.ndarray   # [P, W] bool
+
+    @property
+    def n_fetch_rows(self) -> int:
+        """Rows staged host→device per step (one per (vertex, consumer) —
+        the PCIe fetch is per worker, like the uncached wire tier)."""
+        return int(self.feat_valid.sum())
+
+    @property
+    def width(self) -> int:
+        return int(self.feat_pos.shape[1])
+
+
+@dataclasses.dataclass(frozen=True)
 class ExchangePlan:
     """Compiled communication program for one CachePlan."""
     num_parts: int
@@ -252,6 +281,7 @@ class ExchangePlan:
     glob: GlobalTier
     refresh_every: int
     total_halo: int
+    host: HostTier | None = None   # layer-0 out-of-core fetch program
 
     def bytes_per_step(self, feat_dim: int, refresh: bool,
                        dtype_bytes: int = 4) -> int:
@@ -315,6 +345,41 @@ class ExchangePlan:
         out["global"] = glob_rows() if refresh else 0
         out["total"] = out["uncached"] + out["local"] + out["global"]
         return out
+
+    def host_fetch_rows(self, consume_stale: bool, stale_layers: int) -> dict:
+        """Rows a ``features="host"`` step stages host→device (PCIe):
+        the layer-0 host tier every step, plus — on stale-consuming
+        (cached/pipelined) steps — each exchange layer's deduplicated
+        global buffer.  Exact counts; the staged buffers' valid rows and
+        the host store's accounted fetches must equal these (asserted by
+        the out-of-core harness)."""
+        if self.host is None:
+            raise ValueError("plan has no host tier (built by an older "
+                             "build_exchange_plan?)")
+        l0 = self.host.n_fetch_rows
+        gl = self.glob.n_unique * max(0, stale_layers) if consume_stale else 0
+        return {"l0": l0, "global": gl, "total": l0 + gl}
+
+    def host_bytes_per_step(self, feat_dim: int, dims,
+                            consume_stale: bool,
+                            dtype_bytes: int = 4) -> int:
+        """Host→device bytes of one ``features="host"`` step:
+        ``feat_dim``-wide layer-0 rows every step plus the staged global
+        buffers (``dims`` = the stale exchange-layer widths) on
+        stale-consuming steps, at the staged payload width
+        (``dtype_bytes``: 2 under ``halo_dtype="bf16"``)."""
+        if self.host is None:
+            raise ValueError("plan has no host tier")
+        n = self.host.n_fetch_rows * feat_dim
+        if consume_stale:
+            n += sum(self.glob.n_unique * int(d) for d in dims)
+        return n * dtype_bytes
+
+    def host_writeback_bytes(self, dims) -> int:
+        """Device→host bytes of one emit (refresh/pipelined/transition)
+        step: each exchange layer's freshly built global buffer is written
+        back dequantised (f32), matching the device-mode cache content."""
+        return sum(self.glob.n_unique * int(d) * 4 for d in dims)
 
 
 def _pad2(rows: list[np.ndarray], fill: int, dtype=np.int32,
@@ -509,9 +574,22 @@ def build_exchange_plan(ps: PartitionSet, plan: CachePlan,
                       read_pos=read_pos, read_buf_idx=read_buf_idx,
                       read_valid=read_valid, buf_valid=buf_valid)
 
+    # Host tier (out-of-core layer 0): every halo position NOT in the
+    # worker's device-resident local cache — uncached ∪ global reads —
+    # fetched from the host feature store each step.  Capacity width is
+    # the sum of the two member tiers' widths, so it is slot-stable
+    # whenever they are.
+    host_pos = [np.concatenate([np.asarray(w.uncached_pos, np.int64),
+                                np.asarray(w.global_pos, np.int64)])
+                for w in plan.workers]
+    host_w = (pt.un_recv + pt.glob_read) if pt else None
+    feat_pos, feat_valid = _pad2([q.astype(np.int32) for q in host_pos],
+                                 fill=0, width=host_w)
+    host = HostTier(feat_pos=feat_pos, feat_valid=feat_valid)
+
     return ExchangePlan(num_parts=p, uncached=uncached, local=local,
                         glob=glob, refresh_every=plan.refresh_every,
-                        total_halo=ps.total_halo())
+                        total_halo=ps.total_halo(), host=host)
 
 
 # ---------------------------------------------------------------------------

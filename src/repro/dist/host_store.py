@@ -1,0 +1,226 @@
+"""Host-resident feature/embedding store with async staged host→device
+fetch — the out-of-core tier behind the runtimes' ``features="host"`` mode
+and the serve engine's host tier.
+
+The paper's JACA plans a *shared CPU cache* (C_CPU) next to the per-worker
+GPU caches; until this module the runtimes emulated it as a replicated
+**device** buffer, so every "host-cached" row still spent HBM.  The store
+makes the CPU tier real:
+
+- **feature table** — the stacked halo input features stay host numpy;
+  each step stages exactly the plan's host-fetched rows
+  (:class:`~repro.dist.exchange.HostTier`) to the device via
+  ``jax.device_put`` — the transfer is *async*, so a staged buffer issued
+  before a jitted step dispatch rides under that step's compute (BGL's
+  pipelined-fetch observation; the double-buffer ring below keeps up to
+  ``prefetch_depth`` fetches in flight).
+- **global-tier buffers** — the per-exchange-layer deduplicated global
+  cache ``[G, d]`` lives here between steps: refresh steps build it
+  on-wire and write it *back* (d2h), cached steps stage it h2d for the
+  stale reads.  Capacity is charged against measured host RAM
+  (:func:`repro.core.device_profile.detect_host_mem_gib`), not the device.
+
+``halo_dtype`` mirrors the wire compression: staged payloads are cast on
+the **host** side (PCIe moves the narrow dtype) and dequantised back to
+the compute dtype on device — same numerics as the compressed halo
+transport.
+
+Byte accounting is exact and *consumption*-driven: a staged fetch is a
+:class:`StagedFetch` carrying its valid-row/byte counts, and the runtimes
+account it via :meth:`HostFeatureStore.account_fetch` when the step that
+consumes it is dispatched — prefetched-then-flushed buffers (plan change)
+never pollute the counters, so plan-counted host-fetch rows == accounted
+staged valid rows == the ``bytes_per_step`` deltas the forced-multi-device
+harness asserts.
+
+CPU-backend caveat: ``jax.device_put`` of a numpy array may alias the host
+buffer (zero-copy).  Every ``stage_*`` therefore device_puts a *fresh*
+gather result (numpy fancy indexing allocates) and never mutates a buffer
+after staging it — the ring only retains handles to bound in-flight
+transfers, it does not recycle storage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+__all__ = ["HostFeatureStore", "StagedFetch", "halo_dtype_info",
+           "suggest_prefetch_depth"]
+
+
+def halo_dtype_info(halo_dtype) -> tuple:
+    """Normalise the halo payload dtype knob -> ``(cast dtype | None, bytes)``.
+
+    ``None``/f32 ships halo rows at full width; ``"bf16"`` casts the
+    payload before transport (wire or PCIe) and dequantises back to the
+    compute dtype on the consuming side — halving every tier's bytes
+    (threaded through :meth:`~repro.dist.ExchangePlan.bytes_per_step` and
+    the host-fetch accounting via ``dtype_bytes``).
+    """
+    import jax.numpy as jnp
+    if halo_dtype in (None, "f32", "fp32", "float32", jnp.float32):
+        return None, 4
+    if halo_dtype in ("bf16", "bfloat16", jnp.bfloat16):
+        return jnp.bfloat16, 2
+    raise ValueError(f"unknown halo_dtype {halo_dtype!r}; "
+                     "expected None, 'f32' or 'bf16'")
+
+
+@dataclasses.dataclass(frozen=True)
+class StagedFetch:
+    """One in-flight host→device fetch: the device handle plus the exact
+    valid-row/byte counts the consuming step must account."""
+    array: object      # jax.Array, transfer possibly still in flight
+    rows: int          # valid rows gathered (padding rows excluded)
+    nbytes: int        # rows x feat_dim x staged dtype width
+    gather_s: float    # host-side gather+cast seconds (excludes transfer)
+
+
+def suggest_prefetch_depth(fetch_bytes_per_step: int, step_s: float,
+                           h2d_gib_s: float, max_depth: int = 8) -> int:
+    """Prefetch depth from measured H2D bandwidth: enough in-flight
+    fetches to cover one step's host bytes within one step time,
+    ``max(1, ceil(transfer_s / step_s))``, clamped to ``max_depth``.
+
+    ``h2d_gib_s`` comes from a measured profile's ``h2d`` time (see
+    :func:`repro.core.device_profile.measure_profile`, which also reports
+    ``host_mem_gib`` for capacity sizing).
+    """
+    if fetch_bytes_per_step <= 0 or step_s <= 0 or h2d_gib_s <= 0:
+        return 2
+    transfer_s = fetch_bytes_per_step / (h2d_gib_s * 1024.0 ** 3)
+    return int(np.clip(np.ceil(transfer_s / step_s), 1, max_depth))
+
+
+class HostFeatureStore:
+    """Host tables + staged-fetch machinery (see module docstring).
+
+    ``feat`` is any host array whose leading index tuple selects rows:
+    the training runtimes pass the stacked halo features ``[P, NH, F]``
+    and gather by ``(part, halo_pos)``; the serve engine passes the
+    precomputed logits table ``[N, C]`` and gathers by node id.
+    """
+
+    def __init__(self, feat: np.ndarray, halo_dtype=None,
+                 prefetch_depth: int = 2):
+        self.feat = np.ascontiguousarray(feat, dtype=np.float32)
+        self.cast_dtype, self.dtype_bytes = halo_dtype_info(halo_dtype)
+        self.prefetch_depth = max(1, int(prefetch_depth))
+        # per-exchange-layer global-tier buffers: layer -> (table, n_valid)
+        self._bufs: dict[int, tuple[np.ndarray, int]] = {}
+        self._inflight: deque = deque()
+        self.stats = {"fetches": 0, "fetch_rows": 0, "fetch_bytes": 0,
+                      "writebacks": 0, "writeback_rows": 0,
+                      "writeback_bytes": 0, "gather_s": 0.0}
+
+    # -- staging -----------------------------------------------------------
+
+    def _cast(self, rows: np.ndarray) -> np.ndarray:
+        if self.cast_dtype is not None:
+            return rows.astype(self.cast_dtype)
+        return rows
+
+    def _put(self, rows: np.ndarray, device) -> object:
+        import jax
+        handle = (jax.device_put(rows, device) if device is not None
+                  else jax.device_put(rows))
+        self._inflight.append(handle)
+        while len(self._inflight) > self.prefetch_depth:
+            # bound in-flight transfers: block on the oldest fetch only
+            # once `prefetch_depth` newer ones are behind it (consumed
+            # handles may already be donated into a step — skip those)
+            old = self._inflight.popleft()
+            if not getattr(old, "is_deleted", lambda: False)():
+                jax.block_until_ready(old)
+        return handle
+
+    def stage_rows(self, idx, valid: np.ndarray | None = None,
+                   device=None) -> StagedFetch:
+        """Stage ``feat[idx]`` to the device: host gather, zero invalid
+        (padding) rows, ``halo_dtype`` cast, async ``device_put``.
+
+        ``idx`` is any numpy fancy index into ``feat``'s leading dims
+        (e.g. ``(part[:, None], halo_pos)`` for the stacked layout);
+        ``valid`` masks real rows.  Returns a :class:`StagedFetch` the
+        caller accounts via :meth:`account_fetch` when consumed.
+        """
+        t0 = time.perf_counter()
+        rows = self.feat[idx]
+        if valid is not None:
+            rows = np.where(np.asarray(valid)[..., None], rows, 0.0)
+            n = int(np.asarray(valid).sum())
+        else:
+            n = int(np.prod(rows.shape[:-1]))
+        rows = self._cast(np.ascontiguousarray(rows, np.float32))
+        gather_s = time.perf_counter() - t0
+        return StagedFetch(array=self._put(rows, device), rows=n,
+                           nbytes=n * rows.shape[-1] * self.dtype_bytes,
+                           gather_s=gather_s)
+
+    def fetch_rows(self, idx, device=None) -> np.ndarray:
+        """Synchronous staged fetch for the serve path: same gather/stage
+        machinery, accounted immediately, materialised back to numpy."""
+        import jax
+        staged = self.stage_rows(idx, device=device)
+        self.account_fetch(staged)
+        return np.asarray(jax.block_until_ready(staged.array),
+                          dtype=np.float32)
+
+    def account_fetch(self, staged: StagedFetch) -> None:
+        """Record one *consumed* staged fetch.  Prefetches flushed by a
+        plan change are never accounted — staged == consumed stays exact."""
+        self.stats["fetches"] += 1
+        self.stats["fetch_rows"] += staged.rows
+        self.stats["fetch_bytes"] += staged.nbytes
+        self.stats["gather_s"] += staged.gather_s
+
+    # -- global-tier buffers ----------------------------------------------
+
+    def write_buf(self, layer: int, device_buf, n_valid: int) -> None:
+        """d2h writeback of one exchange layer's freshly built global
+        buffer ``[G, d]`` (f32, dequantised — matching the device-mode
+        cache content).  ``n_valid`` is the plan's ``glob.n_unique``."""
+        rows = np.asarray(device_buf, dtype=np.float32)
+        self._bufs[layer] = (rows, int(n_valid))
+        self.stats["writebacks"] += 1
+        self.stats["writeback_rows"] += int(n_valid)
+        self.stats["writeback_bytes"] += int(n_valid) * rows.shape[-1] * 4
+
+    def stage_buf(self, layer: int, device=None) -> StagedFetch:
+        """Stage one exchange layer's host-resident global buffer to the
+        device (h2d, ``halo_dtype``-cast like every staged payload)."""
+        if layer not in self._bufs:
+            raise KeyError(f"global buffer for exchange layer {layer} was "
+                           "never written back; run a refresh step first")
+        rows, n_valid = self._bufs[layer]
+        t0 = time.perf_counter()
+        payload = self._cast(rows)
+        gather_s = time.perf_counter() - t0
+        return StagedFetch(array=self._put(payload, device), rows=n_valid,
+                           nbytes=n_valid * rows.shape[-1] * self.dtype_bytes,
+                           gather_s=gather_s)
+
+    def init_buf(self, layer: int, shape: tuple, n_valid: int) -> None:
+        """Zero-fill one layer's buffer (cold caches; matches the
+        zero-initialised device caches of ``init_caches``)."""
+        self._bufs[layer] = (np.zeros(shape, np.float32), int(n_valid))
+
+    def has_buf(self, layer: int) -> bool:
+        return layer in self._bufs
+
+    # -- accounting --------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        return dict(self.stats)
+
+    def delta(self, before: dict) -> dict:
+        return {k: self.stats[k] - before.get(k, 0) for k in self.stats}
+
+    def resident_bytes(self) -> int:
+        """Host bytes the store holds (feature table + buffers) — what the
+        out-of-core benchmark charges against host RAM instead of HBM."""
+        return int(self.feat.nbytes
+                   + sum(b.nbytes for b, _ in self._bufs.values()))

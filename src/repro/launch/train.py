@@ -81,10 +81,14 @@ def run_gnn(args) -> dict:
     sp = stack_partitions(ps, task, backend=args.backend)
     opt = adam(args.lr)
     halo_dtype = getattr(args, "halo_dtype", "f32")
+    features = getattr(args, "features", "device")
+    prefetch_depth = getattr(args, "prefetch_depth", 2)
     runtime = make_sim_runtime(cfg, sp, xplan, opt,
                                exchange_layer0=not args.jaca,
                                backend=args.backend,
-                               halo_dtype=halo_dtype)
+                               halo_dtype=halo_dtype,
+                               features=features,
+                               prefetch_depth=prefetch_depth)
     ctl = StalenessController(refresh_every=args.refresh_every,
                               adaptive=args.adaptive_staleness,
                               replan_every=getattr(args, "replan_every", 1))
@@ -117,6 +121,10 @@ def run_gnn(args) -> dict:
         "epochs": args.epochs, "resumed_from": start_epoch,
         "final_loss": report.losses[-1] if report.losses else None,
         "halo_dtype": halo_dtype,
+        "features": features, "prefetch_depth": prefetch_depth,
+        "host_fetch_rows": report.host_fetch_rows,
+        "host_fetch_bytes": report.host_fetch_bytes,
+        "host_writeback_bytes": report.host_writeback_bytes,
         "cache_policy": cache_policy,
         "replan_events": report.replan_events,
         "planner_hit_rate": report.hit_rate,
@@ -205,6 +213,15 @@ def main():
     g.add_argument("--halo-dtype", default="f32", choices=["f32", "bf16"],
                    help="halo payload dtype on the wire: bf16 halves every "
                         "tier's exchange bytes (dequantised on scatter)")
+    g.add_argument("--features", default="device",
+                   choices=["device", "host"],
+                   help="'host' keeps the halo feature/embedding table in a "
+                        "host-resident store (out-of-core): layer-0 rows "
+                        "arrive via double-buffered h2d prefetch, global-tier "
+                        "buffers live on the host between steps")
+    g.add_argument("--prefetch-depth", type=int, default=2,
+                   help="host-store double-buffer depth (in-flight h2d "
+                        "fetches; 2 = classic double buffering)")
     g.add_argument("--hidden", type=int, default=256)
     g.add_argument("--layers", type=int, default=3)
     g.add_argument("--parts", type=int, default=4)

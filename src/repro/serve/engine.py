@@ -10,8 +10,11 @@ engine answers ``logits(v)`` queries from a two-tier embedding cache:
   stable-argsort priority).  Row fetch goes through the Pallas
   :func:`~repro.kernels.ops.gather_rows` kernel — the JACA ``pick_cache``
   hot path, load-bearing at last.
-- **host tier** — the full precomputed table behind it (CPU memory); every
-  query the hot tier misses is served from here.
+- **host tier** — the full precomputed table behind it, held in a
+  :class:`~repro.dist.host_store.HostFeatureStore` (the same host-resident
+  store the out-of-core training runtimes use); every query the hot tier
+  misses is served through the store's staged fetch, and its latency is
+  accounted separately (``host_fetch_s``) from hot-tier service.
 
 Queries arrive through a deadline/size **micro-batcher**: a batch closes
 when it reaches ``max_batch`` or when its oldest query has waited
@@ -34,6 +37,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.host_store import HostFeatureStore
 from repro.graph.graph import Graph
 from repro.graph.partition import PartitionSet
 from repro.kernels.ops import gather_rows
@@ -182,7 +186,8 @@ class GNNServeEngine:
 
     def __init__(self, store: EmbeddingStore, params, graph: Graph,
                  hot_ids: np.ndarray, features: np.ndarray | None = None,
-                 fresh_hops: int | None = None, interpret: bool = True):
+                 fresh_hops: int | None = None, interpret: bool = True,
+                 host_store: HostFeatureStore | None = None):
         self.store = store
         self.cfg = store.cfg
         self.params = params
@@ -207,11 +212,16 @@ class GNNServeEngine:
         self.hot_slot[self.hot_ids] = np.arange(self.hot_ids.size,
                                                 dtype=np.int32)
         self.hot_buf = jnp.asarray(store.logits[self.hot_ids])  # device tier
-        self.host_logits = store.logits                          # host tier
+        # host tier: the full table lives in a HostFeatureStore (misses
+        # go through its staged fetch, not a raw fancy-index); a shared
+        # store may be injected (e.g. one built over training features)
+        self.host_store = (host_store if host_store is not None
+                           else HostFeatureStore(store.logits))
         # staleness
         self.stale = np.zeros(n, dtype=bool)
         self.stats = {"queries": 0, "hot_hits": 0, "host_hits": 0,
-                      "fresh_recomputes": 0, "batches": 0}
+                      "fresh_recomputes": 0, "batches": 0,
+                      "host_fetch_s": 0.0}
 
     # -- freshness ---------------------------------------------------------
 
@@ -266,7 +276,8 @@ class GNNServeEngine:
 
     def lookup(self, nodes: np.ndarray) -> np.ndarray:
         """Pure tiered fetch (no staleness check): hot tier via the Pallas
-        gather kernel, host tier for the rest."""
+        gather kernel, host-store staged fetch for the rest (timed
+        separately into ``host_fetch_s``)."""
         nodes = np.asarray(nodes, np.int64)
         out = np.empty((nodes.size, self.cfg.out_dim), np.float32)
         slots = self.hot_slot[nodes]
@@ -276,7 +287,9 @@ class GNNServeEngine:
                                interpret=self.interpret)
             out[hit] = np.asarray(rows)
         if (~hit).any():
-            out[~hit] = self.host_logits[nodes[~hit]]
+            t0 = time.perf_counter()
+            out[~hit] = self.host_store.fetch_rows(nodes[~hit])
+            self.stats["host_fetch_s"] += time.perf_counter() - t0
         self.stats["queries"] += int(nodes.size)
         self.stats["hot_hits"] += int(hit.sum())
         self.stats["host_hits"] += int((~hit).sum())
@@ -357,5 +370,9 @@ def serve_stream(engine: GNNServeEngine, stream: QueryStream,
         "hot_hit_rate": d["hot_hits"] / served,
         "host_hit_rate": d["host_hits"] / served,
         "fresh_rate": d["fresh_recomputes"] / served,
+        # host-tier staged-fetch latency, separated from hot-tier service
+        "host_fetch_ms": d["host_fetch_s"] * 1e3,
+        "host_fetch_per_row_ms": (d["host_fetch_s"] / d["host_hits"] * 1e3
+                                  if d["host_hits"] else 0.0),
         "busy_s": busy,
     }

@@ -1,0 +1,386 @@
+"""Out-of-core host feature store: HostTier plan invariants, the staged
+fetch/writeback machinery, host-RAM capacity detection, and the
+``features="host"`` runtimes.
+
+Two layers of coverage:
+
+- in-process unit/property tests: HostTier membership (= uncached ∪
+  global reads, disjoint from the device-resident local cache), exact
+  consumption-driven accounting, ``halo_dtype`` staging casts, the
+  double-buffer ring under re-plans (``set_plan`` / ``step_transition``)
+  on ragged uneven partitions — parity with the device-resident oracle at
+  every step proves no staged buffer is ever served stale or mis-rowed;
+- subprocess parity runs on 8 forced host devices
+  (``host_parity_script.py``): host vs device training <= 1e-5
+  (logits + sgd(1.0)-pinned grads) for every aggregation backend and
+  both halo transports, exact fetch accounting, no donation warnings.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "host_parity_script.py")
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, _SCRIPT, *args],
+                          capture_output=True, text=True, timeout=900,
+                          env=env)
+
+
+@pytest.mark.parametrize(
+    "flags",
+    [("--backend", "edges"), ("--backend", "edges", "--transport", "p2p"),
+     ("--backend", "ell"), ("--backend", "hybrid"), ("--bf16",)],
+    ids=["edges", "edges_p2p", "ell", "hybrid", "bf16"])
+def test_host_matches_device(flags):
+    res = _run(*flags)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    assert "OK" in res.stdout
+    assert "donated buffers were not usable" not in res.stderr
+
+
+# --------------------------------------------------- HostTier plan invariants
+
+def _xplan(n, m, parts, seed, c_gpu, c_cpu, pad_cap=None):
+    from repro.core import CacheCapacity, build_cache_plan
+    from repro.dist import build_exchange_plan, exchange_capacity
+    from repro.graph import build_partition, rmat
+    from repro.graph.partition import random_partition
+
+    g = rmat(n, m, seed=seed)
+    assign = random_partition(g, parts, seed=seed)
+    for p in range(parts):       # every part non-empty
+        assign[p % n] = p
+    ps = build_partition(g, assign, hops=1)
+    cap = CacheCapacity(c_gpu=[c_gpu] * parts, c_cpu=c_cpu)
+    plan = build_cache_plan(ps, cap, refresh_every=2)
+    pad = exchange_capacity(ps, pad_cap) if pad_cap is not None else None
+    return ps, build_exchange_plan(ps, plan, pad_to=pad), plan
+
+
+@pytest.mark.parametrize("seed,parts,c_gpu,c_cpu",
+                         [(0, 2, 0, 0), (1, 3, 5, 10), (2, 4, 12, 7),
+                          (3, 4, 1000, 1000), (4, 4, 3, 0)])
+def test_host_tier_membership(seed, parts, c_gpu, c_cpu):
+    """Per worker, the host tier's valid positions are exactly
+    uncached_pos ∪ global_pos — every halo row NOT in the device-resident
+    local cache, each exactly once, none overlapping local_pos."""
+    ps, xplan, plan = _xplan(60, 240, parts, seed, c_gpu, c_cpu)
+    h = xplan.host
+    assert h is not None
+    total = 0
+    for q, w in enumerate(plan.workers):
+        got = np.sort(h.feat_pos[q][h.feat_valid[q]])
+        want = np.sort(np.concatenate([w.uncached_pos, w.global_pos]))
+        assert np.array_equal(got, want.astype(got.dtype))
+        assert np.unique(got).size == got.size
+        assert np.intersect1d(got, w.local_pos).size == 0
+        total += got.size
+    assert h.n_fetch_rows == total
+    assert h.width == h.feat_pos.shape[1]
+
+
+def test_host_tier_slot_stable_width():
+    """Under a capacity-padded plan the host width is un_recv + glob_read,
+    so re-planned memberships swap as data without a shape change."""
+    from repro.core import CacheCapacity
+    from repro.dist import exchange_capacity
+    cap = CacheCapacity(c_gpu=[6] * 3, c_cpu=12)
+    ps, xp_a, _ = _xplan(60, 240, 3, 1, 6, 12, pad_cap=cap)
+    _, xp_b, _ = _xplan(60, 240, 3, 1, 3, 12, pad_cap=cap)
+    ec = exchange_capacity(ps, cap)
+    assert xp_a.host.width == ec.un_recv + ec.glob_read
+    assert xp_a.host.feat_pos.shape == xp_b.host.feat_pos.shape
+
+
+def test_host_fetch_accounting_methods():
+    """host_fetch_rows / host_bytes_per_step / host_writeback_bytes agree
+    with the tier index sets for every payload width."""
+    _, xplan, plan = _xplan(60, 300, 4, 0, 8, 12)
+    l0 = xplan.host.n_fetch_rows
+    g = xplan.glob.n_unique
+    assert xplan.host_fetch_rows(False, 2) == \
+        {"l0": l0, "global": 0, "total": l0}
+    assert xplan.host_fetch_rows(True, 2) == \
+        {"l0": l0, "global": 2 * g, "total": l0 + 2 * g}
+    for bt in (4, 2):
+        assert xplan.host_bytes_per_step(16, (8, 8), False, bt) \
+            == l0 * 16 * bt
+        assert xplan.host_bytes_per_step(16, (8, 4), True, bt) \
+            == (l0 * 16 + g * 12) * bt
+    assert xplan.host_writeback_bytes((8, 4)) == g * 12 * 4
+    bare = dataclasses.replace(xplan, host=None)
+    with pytest.raises(ValueError, match="host tier"):
+        bare.host_fetch_rows(True, 2)
+    with pytest.raises(ValueError, match="host tier"):
+        bare.host_bytes_per_step(16, (8,), True)
+
+
+# ------------------------------------------------------- store unit tests
+
+def test_stage_rows_masks_and_accounts_on_consumption():
+    import jax
+    from repro.dist.host_store import HostFeatureStore
+    feat = np.arange(3 * 5 * 4, dtype=np.float32).reshape(3, 5, 4)
+    store = HostFeatureStore(feat)
+    pos = np.array([[0, 2, 0], [4, 1, 0], [3, 3, 0]])
+    valid = np.array([[True, True, False],
+                      [True, False, False],
+                      [True, True, True]])
+    staged = store.stage_rows((np.arange(3)[:, None], pos), valid=valid)
+    assert staged.rows == int(valid.sum())
+    assert staged.nbytes == staged.rows * 4 * 4
+    got = np.asarray(jax.block_until_ready(staged.array))
+    want = np.where(valid[..., None], feat[np.arange(3)[:, None], pos], 0.0)
+    np.testing.assert_array_equal(got, want)
+    # nothing accounted until the consuming step dispatches
+    assert store.stats["fetch_rows"] == 0
+    store.account_fetch(staged)
+    assert store.stats["fetch_rows"] == staged.rows
+    assert store.stats["fetch_bytes"] == staged.nbytes
+    assert store.stats["fetches"] == 1
+
+
+def test_fetch_rows_sync_path():
+    from repro.dist.host_store import HostFeatureStore
+    feat = np.random.default_rng(0).normal(size=(20, 6)).astype(np.float32)
+    store = HostFeatureStore(feat)
+    idx = np.array([3, 17, 3, 0])
+    out = store.fetch_rows(idx)
+    np.testing.assert_array_equal(out, feat[idx])
+    assert store.stats["fetch_rows"] == 4      # accounted immediately
+    assert store.delta(store.snapshot()) == \
+        {k: 0 for k in store.stats}
+
+
+def test_bf16_staging_halves_bytes():
+    import jax
+    import jax.numpy as jnp
+    from repro.dist.host_store import HostFeatureStore, halo_dtype_info
+    assert halo_dtype_info(None) == (None, 4)
+    assert halo_dtype_info("bf16") == (jnp.bfloat16, 2)
+    with pytest.raises(ValueError, match="halo_dtype"):
+        halo_dtype_info("f8")
+    feat = np.random.default_rng(1).normal(size=(10, 8)).astype(np.float32)
+    s32 = HostFeatureStore(feat)
+    s16 = HostFeatureStore(feat, halo_dtype="bf16")
+    idx = np.arange(10)
+    a = s32.stage_rows(idx)
+    b = s16.stage_rows(idx)
+    assert b.nbytes * 2 == a.nbytes
+    got = np.asarray(jax.block_until_ready(b.array).astype(jnp.float32))
+    np.testing.assert_allclose(got, feat, rtol=1e-2, atol=1e-2)
+
+
+def test_global_buffer_roundtrip():
+    import jax
+    from repro.dist.host_store import HostFeatureStore
+    store = HostFeatureStore(np.zeros((4, 4), np.float32))
+    with pytest.raises(KeyError, match="never written back"):
+        store.stage_buf(0)
+    store.init_buf(0, (6, 3), n_valid=5)
+    assert store.has_buf(0) and not store.has_buf(1)
+    z = store.stage_buf(0)
+    assert z.rows == 5
+    np.testing.assert_array_equal(
+        np.asarray(jax.block_until_ready(z.array)), np.zeros((6, 3)))
+    buf = np.random.default_rng(2).normal(size=(6, 3)).astype(np.float32)
+    store.write_buf(0, buf, n_valid=5)
+    assert store.stats["writeback_bytes"] == 5 * 3 * 4
+    back = store.stage_buf(0)
+    np.testing.assert_array_equal(
+        np.asarray(jax.block_until_ready(back.array)), buf)
+    assert store.resident_bytes() == 4 * 4 * 4 + 6 * 3 * 4
+
+
+def test_ring_backpressure_skips_consumed_handles():
+    """The in-flight bound must not block on handles a donated step has
+    already consumed (deleted buffers cannot be waited on)."""
+    from repro.dist.host_store import HostFeatureStore
+    feat = np.ones((8, 4), np.float32)
+    store = HostFeatureStore(feat, prefetch_depth=1)
+    staged = [store.stage_rows(np.arange(4)) for _ in range(3)]
+    staged[0].array.delete()           # simulate donation into a step
+    store.stage_rows(np.arange(4))     # must not raise
+    assert len(store._inflight) <= 2
+
+
+def test_suggest_prefetch_depth():
+    from repro.dist.host_store import suggest_prefetch_depth
+    assert suggest_prefetch_depth(0, 1.0, 10.0) == 2      # degenerate
+    assert suggest_prefetch_depth(1 << 20, 0.0, 10.0) == 2
+    slow = suggest_prefetch_depth(1 << 30, 1e-3, 1.0)
+    assert slow == 8                                      # clamped
+    assert suggest_prefetch_depth(1 << 20, 1.0, 100.0) == 1
+
+
+# ------------------------------------------- host-RAM capacity detection
+
+def test_detect_host_mem_gib():
+    from repro.core.device_profile import detect_host_mem_gib
+    got = detect_host_mem_gib()
+    assert 0.1 < got < 1 << 20
+
+
+def test_cal_capacity_host_ram_default():
+    """m_cpu_gib=None resolves to the profiles' host_mem_gib floor (the
+    declared Table 1 profiles keep the paper's 16 GiB assumption), and to
+    the detected machine RAM when no profile declares one."""
+    from repro.core import PROFILES, cal_capacity
+    from repro.graph import build_partition, rmat
+    from repro.graph.partition import random_partition
+    g = rmat(80, 400, seed=0)
+    ps = build_partition(g, random_partition(g, 2, seed=0), hops=1)
+    profiles = [PROFILES["rtx3090"]] * 2
+    default = cal_capacity(ps, [16, 8, 4], profiles)
+    explicit = cal_capacity(ps, [16, 8, 4], profiles, m_cpu_gib=16.0)
+    assert default.c_cpu == explicit.c_cpu
+    assert default.c_gpu == explicit.c_gpu
+    blank = [dataclasses.replace(p, host_mem_gib=0.0) for p in profiles]
+    detected = cal_capacity(ps, [16, 8, 4], blank)
+    assert detected.c_cpu >= 0
+
+
+def test_measured_profile_reports_host_mem():
+    from repro.core.device_profile import measure_profile
+    prof = measure_profile(size=64, repeats=1)
+    assert prof.host_mem_gib > 0.1
+
+
+# ------------------------- double buffer under re-plans (property test)
+
+def test_double_buffer_never_serves_stale_rows_under_replans():
+    """Ragged uneven partitions + live re-planning: the host-backed
+    runtime is stepped through refreshes, cached steps, ``set_plan``
+    swaps and pipelined ``step_transition``s in lockstep with the
+    device-resident oracle.  Param parity <= 1e-5 at every step proves
+    the staged ring never serves a stale or wrong row (flushed prefetches
+    are discarded); the store's consumed rows must equal the plan-counted
+    fetches exactly, including the transition's l0loc restage."""
+    import jax
+    from repro.core import AdaptivePlanner, CacheCapacity
+    from repro.data.gnn_data import FullBatchTask, split_masks
+    from repro.dist import init_caches, make_sim_runtime, stack_partitions
+    from repro.graph import (build_partition, rmat, symmetric_normalize,
+                             synth_features)
+    from repro.models.gnn import GNNConfig, init_gnn
+    from repro.optim import sgd
+
+    g = rmat(240, 1500, seed=11)
+    feats, labels = synth_features(g, 10, 4, seed=11)
+    gn = symmetric_normalize(g)
+    tr, va, te = split_masks(g.num_nodes, seed=11)
+    task = FullBatchTask(graph=gn, features=feats, labels=labels,
+                         train_mask=tr, val_mask=va, test_mask=te,
+                         num_classes=4)
+    # deliberately skewed partition sizes (resource-aware style raggedness)
+    rng = np.random.default_rng(11)
+    assign = rng.choice(3, size=g.num_nodes, p=[0.6, 0.25, 0.15])
+    for p in range(3):
+        assign[p] = p
+    ps = build_partition(gn, assign, hops=1, parts=3)
+    sizes = [pt.n_halo for pt in ps.parts]
+    assert max(sizes) > min(sizes)          # genuinely ragged
+    cfg = GNNConfig(model="gcn", in_dim=10, hidden_dim=12, out_dim=4,
+                    num_layers=3)
+    cap = CacheCapacity(c_gpu=[max(1, max(sizes) // 4)] * 3,
+                        c_cpu=max(1, ps.halo_union().size // 4))
+    planner = AdaptivePlanner(ps, cap, refresh_every=2, policy="lru",
+                              seed=11)
+    xp = planner.exchange_plan()
+    sp = stack_partitions(ps, task)
+    opt = sgd(1.0)
+    dev = make_sim_runtime(cfg, sp, xp, opt, donate=False)
+    host = make_sim_runtime(cfg, sp, xp, opt, donate=False,
+                            features="host", prefetch_depth=3)
+    store = host.host_store
+    snap = store.snapshot()
+
+    params = init_gnn(jax.random.PRNGKey(1), cfg)
+    sd = (params, opt.init(params), init_caches(cfg, xp, 3))
+    sh = (params, opt.init(params),
+          init_caches(cfg, xp, 3, features="host"))
+    ex_layers = cfg.num_layers - 1
+    expected = 0
+    # schedule mixes every flavour with two re-plan mechanisms: pipelined
+    # step_transition (stale tiers consumed on the OLD plan, caches
+    # emitted for the NEW) and a cold set_plan + refresh
+    schedule = ["refresh", "cached", "transition", "cached", "pipelined",
+                "set_plan", "refresh", "cached", "transition", "cached"]
+    for step, kind in enumerate(schedule):
+        cur = host.xplan
+        per = cur.host_fetch_rows(True, ex_layers)
+        if kind == "transition":
+            nxt = planner.exchange_plan(planner.replan())
+            sd = dev.step_transition(*sd, nxt)[:3]
+            sh = host.step_transition(*sh, nxt)[:3]
+            # old plan's stale tiers consumed + the new plan's layer-0
+            # local block restaged (accounted at install)
+            expected += per["total"] + int(nxt.local.n_rows)
+        elif kind == "set_plan":
+            nxt = planner.exchange_plan(planner.replan())
+            dev.set_plan(nxt)
+            host.set_plan(nxt)          # flushes the ring unaccounted
+            expected += int(nxt.local.n_rows)
+            continue
+        else:
+            sd = getattr(dev, f"step_{kind}")(*sd)[:3]
+            sh = getattr(host, f"step_{kind}")(*sh)[:3]
+            expected += (per["l0"] if kind == "refresh" else per["total"])
+        diffs = [float(np.abs(np.asarray(a) - np.asarray(b)).max())
+                 for a, b in zip(jax.tree.leaves(sd[0]),
+                                 jax.tree.leaves(sh[0]))]
+        assert max(diffs) < 1e-5, f"param drift at step {step} ({kind})"
+    d = store.delta(snap)
+    assert d["fetch_rows"] == expected, (d["fetch_rows"], expected)
+
+
+# ------------------------------------------------------ serve host tier
+
+def test_serve_engine_uses_host_store():
+    """The serve engine's host-tier misses go through the shared
+    HostFeatureStore staged fetch (accounted + timed), not a bare numpy
+    gather."""
+    import jax
+    from repro.core import CacheCapacity, build_cache_plan
+    from repro.data.gnn_data import FullBatchTask, split_masks
+    from repro.dist import build_exchange_plan, stack_partitions
+    from repro.graph import (build_partition, metis_partition, rmat,
+                             symmetric_normalize, synth_features)
+    from repro.models.gnn import GNNConfig, init_gnn
+    from repro.serve import (GNNServeEngine, precompute_embeddings,
+                             rank_hot_nodes)
+
+    g = rmat(120, 700, seed=9)
+    feats, labels = synth_features(g, 8, 4, seed=9)
+    gn = symmetric_normalize(g)
+    tr, va, te = split_masks(g.num_nodes, seed=9)
+    task = FullBatchTask(graph=gn, features=feats, labels=labels,
+                         train_mask=tr, val_mask=va, test_mask=te,
+                         num_classes=4)
+    ps = build_partition(gn, metis_partition(gn, 2, seed=9), hops=1)
+    cfg = GNNConfig(model="gcn", in_dim=8, hidden_dim=8, out_dim=4,
+                    num_layers=2)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    xplan = build_exchange_plan(
+        ps, build_cache_plan(ps, CacheCapacity(c_gpu=[4] * 2, c_cpu=10),
+                             refresh_every=2))
+    sp = stack_partitions(ps, task)
+    emb = precompute_embeddings(cfg, ps, sp, xplan, params)
+    hot = rank_hot_nodes(gn, 10, ps=ps, policy="degree")
+    engine = GNNServeEngine(emb, params, gn, hot, features=task.features)
+    cold = np.setdiff1d(np.arange(g.num_nodes), hot)[:16]
+    out = engine.lookup(cold)
+    np.testing.assert_allclose(out, emb.logits[cold], rtol=1e-6, atol=1e-6)
+    assert engine.host_store.stats["fetch_rows"] >= cold.size
+    assert engine.stats["host_fetch_s"] > 0.0
+    assert engine.stats["host_hits"] >= cold.size
