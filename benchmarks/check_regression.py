@@ -48,12 +48,15 @@ GATED_SUITES = ["kernels_bench", "comm_volume", "serve_bench",
 TIMING_SUFFIXES = ("_ms", "_s", "_seconds")
 TIMING_MARKERS = ("time", "qps", "tok", "wall", "p50", "p99", "speedup",
                   "overhead", "benefit", "_leq_")
-SKIP_KEYS = ("_mtime",)
+SKIP_KEYS = ("_mtime", "_wall_s", "trace_file")
 
 
 def is_timing(key: str) -> bool:
+    # unit tokens may sit mid-key when a distribution suffix follows
+    # (host_fetch_ms_zipf), so match them anywhere, not just at the end
     k = key.lower()
     return (k.endswith(TIMING_SUFFIXES)
+            or any(t in ("ms", "s", "seconds") for t in k.split("_"))
             or any(m in k for m in TIMING_MARKERS))
 
 

@@ -23,7 +23,6 @@ def run(out_dir: str = DEFAULT_OUT) -> dict:
         for method, fn in (("metis", metis_partition),
                            ("fennel", fennel_partition),
                            ("random", random_partition)):
-            assign = fn(g, max(PARTS), seed=0)
             for p in PARTS:
                 # re-partition at each p so METIS quality holds
                 a = fn(g, p, seed=0)

@@ -131,7 +131,7 @@ def overhead_sweep(tiny: bool) -> list[dict]:
     return rows
 
 
-def ooc_budget_section(tiny: bool) -> dict:
+def ooc_budget_section(tiny: bool, tracer=None) -> dict:
     """Train with the stacked halo feature table exceeding a simulated
     device budget: host mode keeps only the layer-0 local-tier block
     persistent on device; the full table plus the device-mode global
@@ -178,7 +178,8 @@ def ooc_budget_section(tiny: bool) -> dict:
 
     ctl = StalenessController(refresh_every=REFRESH_EVERY)
     params, rep = train_capgnn(cfg, rt, xplan, parts, opt, epochs=EPOCHS,
-                               controller=ctl, pipeline=True, eval_every=0)
+                               controller=ctl, pipeline=True, eval_every=0,
+                               tracer=tracer)
     # schedule: plain refresh @0 (no stale global staged), pipelined
     # refreshes + cached steps stage the global buffers every other step
     per = xplan.host_fetch_rows(True, len(ex_dims))
@@ -317,8 +318,12 @@ def run(out_dir: str = DEFAULT_OUT, tiny: bool | None = None,
         transports=("allgather", "p2p")) -> dict:
     if tiny is None:
         tiny = bool(int(os.environ.get("REPRO_BENCH_TINY", "0")))
+    tracer = None
+    if bool(int(os.environ.get("REPRO_BENCH_TRACE", "0"))):
+        from repro.obs import Tracer
+        tracer = Tracer()
     sweep = overhead_sweep(tiny)
-    ooc = ooc_budget_section(tiny)
+    ooc = ooc_budget_section(tiny, tracer=tracer)
     acct = _accounting_subprocess(tiny, transports)
 
     overheads = np.array([r["overhead"] for r in sweep])
@@ -344,6 +349,11 @@ def run(out_dir: str = DEFAULT_OUT, tiny: bool | None = None,
         "out_of_core": ooc,
         "accounting": acct,
     }
+    if tracer is not None:
+        # "trace_file" is in the regression gate's SKIP_KEYS: attached,
+        # never gated
+        out["trace_file"] = tracer.export(out_dir,
+                                          prefix="out_of_core")["trace"]
     save(out_dir, "out_of_core", out)
     return out
 

@@ -14,6 +14,7 @@ otherwise, so a sweep keeps every variant side by side.
 from __future__ import annotations
 
 import argparse
+import os
 
 import numpy as np
 
@@ -25,15 +26,25 @@ from repro.dist import (build_exchange_plan, make_sim_runtime,
 from repro.graph import build_partition, metis_partition
 from repro.models.gnn import GNNConfig
 from repro.optim import adam
-from ._util import DEFAULT_OUT, Timer, bench_task, save
+from ._util import DEFAULT_OUT, bench_task, save
 
 EPOCHS = 40
 DATASETS = ("flickr", "reddit")
 MODELS = ("gcn", "sage")
 
 
+def _maybe_tracer():
+    """One shared tracer for the whole suite when ``benchmarks.run
+    --trace`` (REPRO_BENCH_TRACE=1) is on; spans/counters from every
+    variant land on one timeline."""
+    if not bool(int(os.environ.get("REPRO_BENCH_TRACE", "0"))):
+        return None
+    from repro.obs import Tracer
+    return Tracer()
+
+
 def _variant(task, ps_base, profiles, model, jaca: bool, rapa: bool,
-             pipe: bool, backend: str = "edges"):
+             pipe: bool, backend: str = "edges", tracer=None):
     cfg = GNNConfig(model=model, in_dim=task.features.shape[1],
                     hidden_dim=128, out_dim=task.num_classes, num_layers=3)
     ps = ps_base
@@ -53,13 +64,15 @@ def _variant(task, ps_base, profiles, model, jaca: bool, rapa: bool,
     opt = adam(0.01)
     runtime = make_sim_runtime(cfg, sp, xplan, opt, backend=backend)
     ctl = StalenessController(refresh_every=refresh)
-    with Timer() as t:
-        params, rep = train_capgnn(cfg, runtime, xplan, ps.num_parts, opt,
-                                   epochs=EPOCHS, controller=ctl,
-                                   eval_every=0, pipeline=pipe)
+    params, rep = train_capgnn(cfg, runtime, xplan, ps.num_parts, opt,
+                               epochs=EPOCHS, controller=ctl,
+                               eval_every=0, pipeline=pipe, tracer=tracer)
     _, acc = runtime.evaluate(params, "test")
     return {
-        "epoch_s": t.seconds / EPOCHS,
+        # steady-state epoch time: wall_time_s excludes the fenced
+        # first step, which compile_s reports separately
+        "epoch_s": rep.wall_time_s / max(1, EPOCHS - 1),
+        "compile_s": rep.compile_s,
         "comm_mb": rep.comm_bytes / 2 ** 20,
         "comm_reduction": rep.comm_reduction,
         "test_acc": acc,
@@ -75,6 +88,7 @@ VARIANTS = [("vanilla", False, False, False),
 
 def run(out_dir: str = DEFAULT_OUT, backend: str = "edges") -> dict:
     profiles = make_group(PAPER_GROUPS["x4"])
+    tracer = _maybe_tracer()
     table = {}
     for ds in DATASETS:
         task = bench_task(ds)
@@ -84,7 +98,7 @@ def run(out_dir: str = DEFAULT_OUT, backend: str = "edges") -> dict:
             rows = {}
             for name, jaca, rapa, pipe in VARIANTS:
                 rows[name] = _variant(task, ps, profiles, model, jaca, rapa,
-                                      pipe, backend=backend)
+                                      pipe, backend=backend, tracer=tracer)
             table[f"{ds}/{model}"] = rows
 
     # headline claims
@@ -102,6 +116,8 @@ def run(out_dir: str = DEFAULT_OUT, backend: str = "edges") -> dict:
                                      for c in claims.values()),
            "min_acc_delta": min(c["acc_delta"] for c in claims.values())}
     name = "overall" if backend == "edges" else f"overall_{backend}"
+    if tracer is not None:
+        out["trace_file"] = tracer.export(out_dir, prefix=name)["trace"]
     save(out_dir, name, out)
     return out
 

@@ -28,6 +28,28 @@ SUITES = ["halo_obs", "cache_hit", "comm_volume", "rapa_balance",
 _SUMMARY = "bench_summary"
 # not suite outputs: the folded summary itself and the regression baseline
 _NON_SUITE = {_SUMMARY + ".json", "baseline.json"}
+# trace artifacts (repro.obs exports) live beside the suite JSONs but are
+# timelines, not headline scalars — never fold them into the summary
+_TRACE_PREFIXES = ("trace_", "metrics_")
+
+
+def provenance() -> dict:
+    """Environment stamp folded into bench_summary.json so every archived
+    summary records what produced it."""
+    prov: dict = {}
+    try:
+        import jax
+        devs = jax.devices()
+        prov.update(jax_version=jax.__version__,
+                    platform=devs[0].platform,
+                    device_kind=devs[0].device_kind,
+                    device_count=len(devs))
+    except Exception as exc:  # noqa: BLE001 - stamp what we can
+        prov["jax_error"] = repr(exc)
+    import platform as _pl
+    prov["python"] = _pl.python_version()
+    prov["machine"] = _pl.machine()
+    return prov
 
 
 def summarize(out_dir: str, failed: dict | None = None) -> dict:
@@ -36,7 +58,8 @@ def summarize(out_dir: str, failed: dict | None = None) -> dict:
     plus the file's mtime.  Nested sweeps stay in their own files."""
     summary = {}
     for fname in sorted(os.listdir(out_dir)):
-        if not fname.endswith(".json") or fname in _NON_SUITE:
+        if (not fname.endswith(".json") or fname in _NON_SUITE
+                or fname.startswith(_TRACE_PREFIXES)):
             continue
         path = os.path.join(out_dir, fname)
         try:
@@ -63,15 +86,33 @@ def summarize(out_dir: str, failed: dict | None = None) -> dict:
 
 
 def write_summary(out_dir: str | None = None,
-                  failed: dict | None = None) -> str:
+                  failed: dict | None = None,
+                  walls: dict | None = None) -> str:
     if out_dir is None:
         out_dir = os.path.join(os.path.dirname(__file__), "..",
                                "experiments")
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, _SUMMARY + ".json")
+    summary = summarize(out_dir, failed=failed)
+    # per-suite orchestrator wall time; "_wall_s" is in the regression
+    # gate's SKIP_KEYS so it is recorded but never gated.  CI runs one
+    # suite per invocation, so carry stamps for suites not in this run
+    # forward from the previous summary instead of re-folding them away.
+    try:
+        with open(path) as f:
+            prev = json.load(f)
+    except (OSError, ValueError):
+        prev = {}
+    for name, fields in summary.items():
+        old = prev.get(name)
+        if (isinstance(fields, dict) and isinstance(old, dict)
+                and "_wall_s" in old and name not in (walls or {})):
+            fields["_wall_s"] = old["_wall_s"]
+    for name, wall in (walls or {}).items():
+        summary.setdefault(name, {})["_wall_s"] = round(wall, 2)
+    summary["_provenance"] = provenance()
     with open(path, "w") as f:
-        json.dump(summarize(out_dir, failed=failed), f, indent=1,
-                  sort_keys=True)
+        json.dump(summary, f, indent=1, sort_keys=True)
     return path
 
 
@@ -79,7 +120,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="suite names, space- and/or comma-separated")
+    ap.add_argument("--trace", action="store_true",
+                    help="run the training suites under the repro.obs "
+                         "tracer and attach Perfetto trace artifacts "
+                         "(experiments/trace_<suite>.json) per suite")
     args = ap.parse_args()
+    if args.trace:
+        os.environ["REPRO_BENCH_TRACE"] = "1"
     names: list[str] = []
     for chunk in (args.only or []):
         names.extend(n for n in chunk.split(",") if n)
@@ -91,7 +138,7 @@ def main() -> None:
         sys.exit(2)
 
     import importlib
-    results, failures = {}, []
+    results, failures, walls = {}, [], {}
     for name in names:
         print(f"=== {name} ===", flush=True)
         t0 = time.perf_counter()
@@ -103,10 +150,10 @@ def main() -> None:
             failures.append((name, repr(exc)))
             results[name] = f"FAIL {exc!r}"
             print(f"FAIL {name}: {exc!r}")
-        print(f"--- {name} done in {time.perf_counter() - t0:.1f}s\n",
-              flush=True)
+        walls[name] = time.perf_counter() - t0
+        print(f"--- {name} done in {walls[name]:.1f}s\n", flush=True)
 
-    path = write_summary(failed=dict(failures))
+    path = write_summary(failed=dict(failures), walls=walls)
     print(f"=== summary (aggregated -> {os.path.relpath(path)}) ===")
     for name in names:
         print(f"  {name:15s} {results[name]}")

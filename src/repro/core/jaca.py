@@ -638,3 +638,10 @@ class AdaptivePlanner:
     def hit_rate(self) -> float:
         """Cumulative hit rate over every observed access."""
         return self._hits / max(1, self._accesses)
+
+    def counters(self) -> dict:
+        """Snapshot of the cumulative hit accounting in the
+        :mod:`repro.obs` schema — what the tracer's per-step
+        ``planner_hit_rate`` counter track is derived from."""
+        return {"hits": int(self._hits), "accesses": int(self._accesses),
+                "steps": int(self._steps), "hit_rate": self.hit_rate()}

@@ -43,6 +43,8 @@ from repro.core.staleness import StalenessController
 from repro.models.gnn import (EdgeListAdj, EllAdj, GNNConfig, HybridAdj,
                               _layer_apply, accuracy, cross_entropy_loss,
                               init_gnn)
+from repro.obs.annotations import device_scope, host_annotation
+from repro.obs.tracer import NULL_TRACER, StepCounters, device_peak_bytes
 from repro.optim import Optimizer
 
 from .exchange import ExchangePlan, ExchangeTier, GlobalTier, StackedParts
@@ -283,6 +285,17 @@ class SimRuntime:
         :meth:`repro.dist.StackedParts.padding_stats`)."""
         return self.stacked.padding_stats() if self.stacked else {}
 
+    def set_tracer(self, tracer) -> None:
+        """Attach a :class:`repro.obs.Tracer`: the plain-Python stepper
+        wrappers record their staging sub-spans (``l0_stage``,
+        ``h2d_prefetch``, ``writeback``) on it and the host store its
+        ``h2d_put`` dispatches.  Default is the shared no-op tracer —
+        detaching is ``set_tracer(NULL_TRACER)``."""
+        if self._state is not None:
+            self._state["tracer"] = tracer
+        if self.host_store is not None:
+            self.host_store.set_tracer(tracer)
+
     def set_plan(self, xplan: ExchangePlan) -> None:
         """Install a re-ranked plan.  Under a capacity-padded (slot-stable)
         layout the jitted steps keep their compiled executables — only the
@@ -403,7 +416,8 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         def one(lv, hi, hhi):
             adj = build_adj(lv)
             h_local = jnp.concatenate([hi, hhi], axis=0)
-            return _layer_apply(cfg, lp, adj, h_local, ni, is_last)
+            with device_scope("spmm_layer"):
+                return _layer_apply(cfg, lp, adj, h_local, ni, is_last)
         return jax.vmap(one)(adj_leaves, h, halo)
 
     def forward(params, caches, xr, xe, use_stale: bool,
@@ -438,11 +452,13 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             else:
                 d = h.shape[-1]
                 halo = jnp.zeros((p, nh, d), h.dtype)
-                halo = _scatter(halo, xr["un"]["recv_halo_pos"],
-                                _pull(xr["un"], h, hdt),
-                                xr["un"]["recv_valid"])
-                loc_fresh = _pull(xe["loc"], h, hdt)
-                buf_fresh = _build_global(xe["gl"], h, hdt)
+                with device_scope("tier_pull_uncached"):
+                    halo = _scatter(halo, xr["un"]["recv_halo_pos"],
+                                    _pull(xr["un"], h, hdt),
+                                    xr["un"]["recv_valid"])
+                with device_scope("tier_pull_refresh"):
+                    loc_fresh = _pull(xe["loc"], h, hdt)
+                    buf_fresh = _build_global(xe["gl"], h, hdt)
                 if use_stale:
                     loc_use, loc_t = caches["local"][li - 1], xr["loc"]
                     if host_mode:
@@ -458,7 +474,8 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                 halo = _read_global(gl_t, buf_use, halo)
                 fresh["local"].append(loc_fresh)
                 fresh["global"].append(buf_fresh)
-            h = layer_all(lp, h, halo, is_last=(li == layers - 1))
+            with device_scope(f"layer{li}"):
+                h = layer_all(lp, h, halo, is_last=(li == layers - 1))
         return h, fresh
 
     def loss_fn(params, caches, xr, xe, use_stale: bool,
@@ -557,12 +574,16 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                  "cached": make_step(True, False),
                  "pipelined": make_step(True, True),
                  "forward": jax.jit(_fwd_fresh)}
-    state = {"xarr": exchange_arrays(xplan, include_host=host_mode)}
+    state = {"xarr": exchange_arrays(xplan, include_host=host_mode),
+             "tracer": NULL_TRACER}
 
     def wrap(name):
+        ann = f"capgnn/step_{name}"
+
         def stepper(params, opt_state, caches):
             xa = state["xarr"]
-            return jit_steps[name](params, opt_state, caches, xa, xa)
+            with host_annotation(ann):
+                return jit_steps[name](params, opt_state, caches, xa, xa)
         return stepper
 
     if host_mode:
@@ -633,50 +654,65 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         def wrap_host(name):
             use_gl = name in ("cached", "pipelined")
             emit = name in ("refresh", "pipelined")
+            ann = f"capgnn/step_{name}"
 
             def stepper(params, opt_state, caches):
-                hostd = {"l0": _take_l0()}
-                if use_gl:
-                    hostd["gl"] = _take_gl()
+                tr = state["tracer"]
+                with tr.span("l0_stage"):
+                    hostd = {"l0": _take_l0()}
+                    if use_gl:
+                        hostd["gl"] = _take_gl()
                 xa = state["xarr"]
-                out = jit_steps[name](params, opt_state, caches, hostd,
-                                      state["l0loc"], xa, xa)
+                with host_annotation(ann):
+                    out = jit_steps[name](params, opt_state, caches, hostd,
+                                          state["l0loc"], xa, xa)
                 if emit:
                     new_p, new_s, out_caches, host_out, metrics = out
-                    _writeback(host_out)
+                    with tr.span("writeback"):
+                        _writeback(host_out)
                     out = (new_p, new_s, out_caches, metrics)
-                _prefetch_l0()
+                with tr.span("h2d_prefetch"):
+                    _prefetch_l0()
                 return out
             return stepper
 
         def _set_plan(xp: ExchangePlan):
+            tr = state["tracer"]
             state["xarr"] = exchange_arrays(xp, include_host=True)
             state["hostnp"] = _host_np(xp)
             # old-plan prefetches are flushed *unaccounted* — they were
             # never consumed, so staged == consumed stays exact
             state["l0_ring"].clear()
-            _stage_l0loc()
-            _prefetch_l0()
+            with tr.span("l0_stage"):
+                _stage_l0loc()
+            with tr.span("h2d_prefetch"):
+                _prefetch_l0()
             # the host-resident global buffers keep their (old-tiering)
             # content; shapes are plan-invariant under the capacity-padded
             # layout and the next step after set_plan must be a refresh
         state["_set_plan"] = _set_plan
 
         def _transition(params, opt_state, caches, new_xp: ExchangePlan):
+            tr = state["tracer"]
             # old plan's stale tiers are staged on the OLD layout...
-            hostd = {"l0": _take_l0(), "gl": _take_gl()}
+            with tr.span("l0_stage"):
+                hostd = {"l0": _take_l0(), "gl": _take_gl()}
             xr = state["xarr"]
             xe = exchange_arrays(new_xp, include_host=True)
-            new_p, new_s, out_caches, host_out, metrics = (
-                jit_steps["pipelined"](params, opt_state, caches, hostd,
-                                       state["l0loc"], xr, xe))
+            with host_annotation("capgnn/step_transition"):
+                new_p, new_s, out_caches, host_out, metrics = (
+                    jit_steps["pipelined"](params, opt_state, caches, hostd,
+                                           state["l0loc"], xr, xe))
             state["xarr"] = xe
             state["hostnp"] = _host_np(new_xp)
             # ...while the emitted buffers carry the NEW plan's membership
-            _writeback(host_out)
+            with tr.span("writeback"):
+                _writeback(host_out)
             state["l0_ring"].clear()
-            _stage_l0loc()
-            _prefetch_l0()
+            with tr.span("l0_stage"):
+                _stage_l0loc()
+            with tr.span("h2d_prefetch"):
+                _prefetch_l0()
             return new_p, new_s, out_caches, metrics
         state["_transition"] = _transition
 
@@ -751,6 +787,12 @@ class TrainReport:
     host_fetch_rows: int = 0
     host_fetch_bytes: int = 0
     host_writeback_bytes: int = 0
+    # step 0 wall time (dominated by jit trace+compile), fenced separately
+    # so ``wall_time_s`` above is steady-state only
+    compile_s: float = 0.0
+    # per step-kind {count, p50_ms, p99_ms, total_s} from the tracer's
+    # depth-0 spans; None on untraced runs (timing them would add syncs)
+    phase_stats: dict | None = None
 
 
 def _step_rows(x_read: ExchangePlan, x_emit: ExchangePlan,
@@ -768,8 +810,8 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
                  num_parts: int, opt: Optimizer, epochs: int = 100,
                  eval_every: int = 0, controller: StalenessController | None = None,
                  pipeline: bool = False, seed: int = 0,
-                 params0=None, opt_state0=None, planner=None
-                 ) -> tuple[list, TrainReport]:
+                 params0=None, opt_state0=None, planner=None,
+                 tracer=None) -> tuple[list, TrainReport]:
     """Full-batch CaPGNN training under the staleness schedule.
 
     One step per epoch (full batch).  Per-step bytes are the plan's exact
@@ -779,6 +821,21 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     scheduled refreshes (after warm-up) run as ``step_pipelined`` — the
     refresh payload rides along with the compute instead of a synchronous
     exchange phase; bytes are identical, latency is hidden.
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) records one depth-0 span per
+    step — kind ``refresh``/``cached``/``pipelined``/``transition``, with
+    the ``replan``/``l0_stage``/``writeback``/``h2d_prefetch``/``eval``
+    sub-phases nested inside — plus one typed
+    :class:`repro.obs.StepCounters` record per step whose totals equal
+    this report's ``comm_bytes`` / ``host_fetch_*`` figures exactly (the
+    per-step stream is the same accounting, before summation).  Traced
+    steps are fenced (``block_until_ready``) so span durations measure
+    completed device work; without a tracer no fence is added.
+
+    Timing: step 0 is fenced separately — ``report.compile_s`` is the
+    first step's wall time (dominated by jit trace+compile) and
+    ``wall_time_s`` covers the remaining steady-state steps only, so
+    throughput figures no longer conflate compilation with step time.
 
     ``planner`` (a :class:`repro.core.jaca.AdaptivePlanner`) switches on
     online cache adaptation: at the controller's re-plan boundaries
@@ -810,6 +867,10 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     # isolates the caching effect.
     dtype_bytes = getattr(runtime, "halo_dtype_bytes", 4)
 
+    tr = tracer if tracer is not None else NULL_TRACER
+    if tr.enabled and hasattr(runtime, "set_tracer"):
+        runtime.set_tracer(tr)
+
     losses: list[float] = []
     val_acc: list[float] = []
     comm = 0
@@ -817,37 +878,62 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     refresh_steps = 0
     replan_events = 0
     x_active = xplan
+    dim_bytes = sum(d * dtype_bytes for d in dims)
+    rows_by_worker = None   # per-worker uncached recv rows (traced runs)
+    step_snap = (store.snapshot()
+                 if store is not None and tr.enabled else None)
+    compile_s = 0.0
     t0 = time.perf_counter()
     for e in range(epochs):
         refresh = controller.should_refresh()
         replan = planner is not None and controller.should_replan()
         if replan:
-            x_next = planner.exchange_plan(planner.replan())
-            if pipeline:
-                # transition step: consume/exchange on the old plan,
-                # prefetch the new plan's tier rows in the ring windows
-                params, opt_state, caches, m = runtime.step_transition(
-                    params, opt_state, caches, x_next)
-                step_rows = _step_rows(x_active, x_next, refresh=True)
-            else:
-                runtime.set_plan(x_next)
-                params, opt_state, caches, m = runtime.step_refresh(
-                    params, opt_state, caches)
-                step_rows = _step_rows(x_next, x_next, refresh=True)
-            x_active = x_next
-            replan_events += 1
+            kind = "transition" if pipeline else "refresh"
+        elif refresh and pipeline and controller.step > 0:
+            kind = "pipelined"
+        elif refresh:
+            kind = "refresh"
         else:
-            if refresh and pipeline and controller.step > 0:
-                step_fn = runtime.step_pipelined
-            elif refresh:
-                step_fn = runtime.step_refresh
+            kind = "cached"
+        with tr.step_span(kind, e):
+            if replan:
+                with tr.span("replan", step=e):
+                    x_next = planner.exchange_plan(planner.replan())
+                if pipeline:
+                    # transition step: consume/exchange on the old plan,
+                    # prefetch the new plan's tier rows in the ring windows
+                    params, opt_state, caches, m = runtime.step_transition(
+                        params, opt_state, caches, x_next)
+                    x_read, x_emit = x_active, x_next
+                else:
+                    runtime.set_plan(x_next)
+                    params, opt_state, caches, m = runtime.step_refresh(
+                        params, opt_state, caches)
+                    x_read = x_emit = x_next
+                refreshed_tiers = True
+                x_active = x_next
+                replan_events += 1
             else:
-                step_fn = runtime.step_cached
-            params, opt_state, caches, m = step_fn(params, opt_state, caches)
-            step_rows = _step_rows(x_active, x_active, refresh=refresh)
+                if refresh and pipeline and controller.step > 0:
+                    step_fn = runtime.step_pipelined
+                elif refresh:
+                    step_fn = runtime.step_refresh
+                else:
+                    step_fn = runtime.step_cached
+                params, opt_state, caches, m = step_fn(params, opt_state,
+                                                       caches)
+                x_read = x_emit = x_active
+                refreshed_tiers = refresh
+            step_rows = _step_rows(x_read, x_emit, refresh=refreshed_tiers)
+            tr.fence(m["loss"])
         losses.append(float(m["loss"]))
-        comm += sum(step_rows * d * dtype_bytes for d in dims)
-        vanilla += sum(xplan.total_halo * d * dtype_bytes for d in dims)
+        if e == 0:
+            # fence step 0 separately: its wall time is dominated by jit
+            # trace+compile and must not pollute the steady-state figure
+            compile_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+        comm += step_rows * dim_bytes
+        vanilla += xplan.total_halo * dim_bytes
         refresh_steps += int(refresh)
         # On a transition step the fresh rows are laid out for the NEW plan
         # while the compared caches hold the OLD plan's rows, so the drift
@@ -860,7 +946,40 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
                                       np.asarray(m["drift_global_rows"]))
         controller.observe(drift, refreshed=refresh)
         if eval_every and (e + 1) % eval_every == 0:
-            val_acc.append(runtime.evaluate(params, "val")[1])
+            with tr.span("eval", step=e):
+                val_acc.append(runtime.evaluate(params, "val")[1])
+        if tr.enabled:
+            # counters are recorded at iteration end so the store deltas
+            # (step + any eval fetches) attribute to this step exactly —
+            # the per-step stream sums to the report totals
+            sd = {}
+            if store is not None:
+                sd = store.delta(step_snap)
+                step_snap = store.snapshot()
+            if refreshed_tiers or rows_by_worker is None:
+                rows_by_worker = [int(n) for n in np.asarray(
+                    x_read.uncached.recv_valid).sum(axis=1)]
+            tr.count(StepCounters(
+                step=e, kind=kind,
+                wire_rows_uncached=x_read.uncached.n_rows,
+                wire_rows_local=(x_emit.local.n_rows
+                                 if refreshed_tiers else 0),
+                wire_rows_global=(x_emit.glob.n_unique
+                                  if refreshed_tiers else 0),
+                wire_bytes=step_rows * dim_bytes,
+                wire_bytes_vanilla=xplan.total_halo * dim_bytes,
+                cache_hit_rate=(None if refreshed_tiers else
+                                1.0 - x_read.uncached.n_rows
+                                / max(1, x_read.total_halo)),
+                planner_hit_rate=(planner.hit_rate()
+                                  if planner is not None else None),
+                drift=drift,
+                host_fetch_rows=int(sd.get("fetch_rows", 0)),
+                host_fetch_bytes=int(sd.get("fetch_bytes", 0)),
+                host_writeback_rows=int(sd.get("writeback_rows", 0)),
+                host_writeback_bytes=int(sd.get("writeback_bytes", 0)),
+                device_peak_bytes=device_peak_bytes(),
+                wire_rows_by_worker=rows_by_worker))
     wall = time.perf_counter() - t0
 
     # note: eval_every runs also consume accounted host fetches, so pin
@@ -876,5 +995,7 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
         final_opt_state=opt_state,
         host_fetch_rows=int(hostd.get("fetch_rows", 0)),
         host_fetch_bytes=int(hostd.get("fetch_bytes", 0)),
-        host_writeback_bytes=int(hostd.get("writeback_bytes", 0)))
+        host_writeback_bytes=int(hostd.get("writeback_bytes", 0)),
+        compile_s=compile_s,
+        phase_stats=tr.phase_stats() if tr.enabled else None)
     return params, report

@@ -60,6 +60,8 @@ else:
 
 from repro.kernels.ops import pack_rows
 from repro.models.gnn import GNNConfig, _layer_apply, accuracy, cross_entropy_loss
+from repro.obs.annotations import device_scope, host_annotation
+from repro.obs.tracer import NULL_TRACER
 from repro.optim import Optimizer
 
 from .capgnn_sim import (RUNTIME_FEATURES, halo_dtype_info, init_caches,
@@ -207,6 +209,14 @@ class SpmdRuntime:
         """Valid vs padded stacked-row counts (see
         :meth:`repro.dist.StackedParts.padding_stats`)."""
         return self.stacked.padding_stats() if self.stacked else {}
+
+    def set_tracer(self, tracer) -> None:
+        """Attach a :class:`repro.obs.Tracer` (see
+        :meth:`repro.dist.SimRuntime.set_tracer`)."""
+        if self._state is not None:
+            self._state["tracer"] = tracer
+        if self.host_store is not None:
+            self.host_store.set_tracer(tracer)
 
     def wire_rows(self, refresh: bool, padded: bool = False) -> dict:
         """Rows this runtime's transport moves in one layer exchange (see
@@ -432,20 +442,24 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                 d = h.shape[-1]
                 halo = jnp.zeros((nh, d), h.dtype)
                 un = xr["sh"]["un"]
-                halo = scatter(halo, un["recv_halo_pos"][0], pull(un, h),
-                               un["recv_valid"][0])
+                with device_scope("tier_pull_uncached"):
+                    halo = scatter(halo, un["recv_halo_pos"][0], pull(un, h),
+                                   un["recv_valid"][0])
                 stale_gl = (hostd["gl"][li - 1].astype(h.dtype) if host_mode
                             else caches["global"][li - 1]) if use_stale else None
                 if defer_refresh and p2p:
                     # issue this boundary's refresh rings on the EMIT plan;
                     # consume stale through the READ plan
-                    pending.append((h.dtype, peer_ring(xe["sh"]["loc"], h),
-                                    buf_ring(xe, h)))
+                    with device_scope("refresh_ring_issue"):
+                        pending.append((h.dtype,
+                                        peer_ring(xe["sh"]["loc"], h),
+                                        buf_ring(xe, h)))
                     loc_use, loc_t = caches["local"][li - 1][0], xr["sh"]["loc"]
                     buf_use, gl_t = stale_gl, xr["sh"]["gl"]
                 else:
-                    loc_fresh = pull(xe["sh"]["loc"], h)
-                    buf_fresh = build_global(xe, h)
+                    with device_scope("tier_pull_refresh"):
+                        loc_fresh = pull(xe["sh"]["loc"], h)
+                        buf_fresh = build_global(xe, h)
                     if use_stale:
                         loc_use, loc_t = (caches["local"][li - 1][0],
                                           xr["sh"]["loc"])
@@ -459,18 +473,23 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                                loc_t["recv_valid"][0])
                 halo = read_global(gl_t, buf_use, halo)
             h_local = jnp.concatenate([h, halo], axis=0)
-            h = _layer_apply(cfg, lp, adj, h_local, ni,
-                             is_last=(li == layers - 1))
+            with device_scope(f"layer{li}/spmm"):
+                h = _layer_apply(cfg, lp, adj, h_local, ni,
+                                 is_last=(li == layers - 1))
             # one ring rotation per in-flight refresh, placed right after
             # the layer's SpMM in program order so XLA's latency-hiding
             # scheduler can run the sends under the compute
-            for _, lring, bring in pending:
-                lring.advance()
-                bring.advance()
-        for dtype, lring, bring in pending:
-            fresh["local"].append(
-                peer_collect(xe["sh"]["loc"], lring.finish(), dtype)[None])
-            fresh["global"].append(buf_collect(xe, bring.finish(), dtype))
+            with device_scope("refresh_ring_advance"):
+                for _, lring, bring in pending:
+                    lring.advance()
+                    bring.advance()
+        with device_scope("refresh_ring_finish"):
+            for dtype, lring, bring in pending:
+                fresh["local"].append(
+                    peer_collect(xe["sh"]["loc"], lring.finish(),
+                                 dtype)[None])
+                fresh["global"].append(buf_collect(xe, bring.finish(),
+                                                   dtype))
         return h, fresh
 
     def _device_loss(params, caches, dsh, xr, xe, use_stale: bool,
@@ -612,12 +631,16 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         jit_steps["forward"] = jax.jit(
             lambda params, xa: sm_fwd(params, caches0, data_sh, xa))
     state = {"xarr": spmd_exchange_arrays(xplan, p2p=p2p,
-                                          include_host=host_mode)}
+                                          include_host=host_mode),
+             "tracer": NULL_TRACER}
 
     def wrap(name):
+        ann = f"capgnn/step_{name}"
+
         def stepper(params, opt_state, caches):
             xa = state["xarr"]
-            return jit_steps[name](params, opt_state, caches, xa, xa)
+            with host_annotation(ann):
+                return jit_steps[name](params, opt_state, caches, xa, xa)
         return stepper
 
     if host_mode:
@@ -681,44 +704,59 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         def wrap_host(name):
             use_gl = name in ("cached", "pipelined")
             emit = name in ("refresh", "pipelined")
+            ann = f"capgnn/step_{name}"
 
             def stepper(params, opt_state, caches):
-                hostd = {"l0": _take_l0()}
-                if use_gl:
-                    hostd["gl"] = _take_gl()
+                tr = state["tracer"]
+                with tr.span("l0_stage"):
+                    hostd = {"l0": _take_l0()}
+                    if use_gl:
+                        hostd["gl"] = _take_gl()
                 xa = state["xarr"]
-                out = jit_steps[name](params, opt_state, caches, hostd,
-                                      state["l0loc"], xa, xa)
+                with host_annotation(ann):
+                    out = jit_steps[name](params, opt_state, caches, hostd,
+                                          state["l0loc"], xa, xa)
                 if emit:
                     new_p, new_s, out_caches, host_out, metrics = out
-                    _writeback(host_out)
+                    with tr.span("writeback"):
+                        _writeback(host_out)
                     out = (new_p, new_s, out_caches, metrics)
-                _prefetch_l0()
+                with tr.span("h2d_prefetch"):
+                    _prefetch_l0()
                 return out
             return stepper
 
         def _set_plan(xp: ExchangePlan):
+            tr = state["tracer"]
             state["xarr"] = spmd_exchange_arrays(xp, p2p=p2p,
                                                  include_host=True)
             state["hostnp"] = _host_np(xp)
             state["l0_ring"].clear()     # flushed, never accounted
-            _stage_l0loc()
-            _prefetch_l0()
+            with tr.span("l0_stage"):
+                _stage_l0loc()
+            with tr.span("h2d_prefetch"):
+                _prefetch_l0()
         state["_set_plan"] = _set_plan
 
         def _transition(params, opt_state, caches, new_xp: ExchangePlan):
-            hostd = {"l0": _take_l0(), "gl": _take_gl()}
+            tr = state["tracer"]
+            with tr.span("l0_stage"):
+                hostd = {"l0": _take_l0(), "gl": _take_gl()}
             xr = state["xarr"]
             xe = spmd_exchange_arrays(new_xp, p2p=p2p, include_host=True)
-            new_p, new_s, out_caches, host_out, metrics = (
-                jit_steps["pipelined"](params, opt_state, caches, hostd,
-                                       state["l0loc"], xr, xe))
+            with host_annotation("capgnn/step_transition"):
+                new_p, new_s, out_caches, host_out, metrics = (
+                    jit_steps["pipelined"](params, opt_state, caches, hostd,
+                                           state["l0loc"], xr, xe))
             state["xarr"] = xe
             state["hostnp"] = _host_np(new_xp)
-            _writeback(host_out)         # new plan's membership
+            with tr.span("writeback"):
+                _writeback(host_out)     # new plan's membership
             state["l0_ring"].clear()
-            _stage_l0loc()
-            _prefetch_l0()
+            with tr.span("l0_stage"):
+                _stage_l0loc()
+            with tr.span("h2d_prefetch"):
+                _prefetch_l0()
             return new_p, new_s, out_caches, metrics
         state["_transition"] = _transition
 

@@ -47,6 +47,8 @@ from collections import deque
 
 import numpy as np
 
+from repro.obs.tracer import NULL_TRACER
+
 __all__ = ["HostFeatureStore", "StagedFetch", "halo_dtype_info",
            "suggest_prefetch_depth"]
 
@@ -115,6 +117,13 @@ class HostFeatureStore:
         self.stats = {"fetches": 0, "fetch_rows": 0, "fetch_bytes": 0,
                       "writebacks": 0, "writeback_rows": 0,
                       "writeback_bytes": 0, "gather_s": 0.0}
+        self.tracer = NULL_TRACER
+
+    def set_tracer(self, tracer) -> None:
+        """Attach a :class:`repro.obs.Tracer`: every h2d dispatch records
+        an ``h2d_put`` sub-span (nested inside whatever staging span the
+        caller holds open).  Default is the shared no-op tracer."""
+        self.tracer = tracer
 
     # -- staging -----------------------------------------------------------
 
@@ -125,16 +134,17 @@ class HostFeatureStore:
 
     def _put(self, rows: np.ndarray, device) -> object:
         import jax
-        handle = (jax.device_put(rows, device) if device is not None
-                  else jax.device_put(rows))
-        self._inflight.append(handle)
-        while len(self._inflight) > self.prefetch_depth:
-            # bound in-flight transfers: block on the oldest fetch only
-            # once `prefetch_depth` newer ones are behind it (consumed
-            # handles may already be donated into a step — skip those)
-            old = self._inflight.popleft()
-            if not getattr(old, "is_deleted", lambda: False)():
-                jax.block_until_ready(old)
+        with self.tracer.span("h2d_put", nbytes=int(rows.nbytes)):
+            handle = (jax.device_put(rows, device) if device is not None
+                      else jax.device_put(rows))
+            self._inflight.append(handle)
+            while len(self._inflight) > self.prefetch_depth:
+                # bound in-flight transfers: block on the oldest fetch only
+                # once `prefetch_depth` newer ones are behind it (consumed
+                # handles may already be donated into a step — skip those)
+                old = self._inflight.popleft()
+                if not getattr(old, "is_deleted", lambda: False)():
+                    jax.block_until_ready(old)
         return handle
 
     def stage_rows(self, idx, valid: np.ndarray | None = None,

@@ -144,9 +144,14 @@ def run_gnn(args) -> dict:
     stream = make_stream(args.workload, g.num_nodes, args.queries,
                          qps=args.qps, alpha=args.alpha, seed=args.seed,
                          rank_to_node=rank_to_node)
+    tracer = None
+    if getattr(args, "trace", False):
+        from repro.obs import Tracer
+        tracer = Tracer()
     report = serve_stream(engine, stream,
                           BatchConfig(max_batch=args.max_batch,
-                                      deadline_ms=args.deadline_ms))
+                                      deadline_ms=args.deadline_ms),
+                          tracer=tracer)
     out = {
         "dataset": args.dataset, "model": cfg.model,
         "backend": backend, "parts": p,
@@ -157,6 +162,10 @@ def run_gnn(args) -> dict:
         **{k: (round(v, 4) if isinstance(v, float) else v)
            for k, v in report.items()},
     }
+    if tracer is not None:
+        paths = tracer.export(args.trace_dir, prefix="serve")
+        out["trace_file"] = paths["trace"]
+        out["metrics_file"] = paths["metrics"]
     print(json.dumps(out, indent=1))
     return out
 
@@ -213,6 +222,13 @@ def main():
     g.add_argument("--fresh-hops", type=int, default=None,
                    help="k for the fresh recompute (default: num layers, "
                         "which is exact)")
+    g.add_argument("--trace", action="store_true",
+                   help="enable the repro.obs tracer over the serve loop: "
+                        "per-batch spans + hit/miss counters, exported as "
+                        "a Perfetto-loadable Chrome trace")
+    g.add_argument("--trace-dir", default="experiments",
+                   help="directory for trace_serve.json / "
+                        "metrics_serve.jsonl (with --trace)")
     g.add_argument("--seed", type=int, default=0)
     g.set_defaults(fn=run_gnn)
 

@@ -107,11 +107,18 @@ def run_gnn(args) -> dict:
             params0, opt_state0 = state["params"], state["opt_state"]
             start_epoch = step
     run_epochs = max(0, args.epochs - start_epoch)
-    params, report = train_capgnn(cfg, runtime, xplan, p, opt,
-                                  epochs=run_epochs, controller=ctl,
-                                  pipeline=args.pipeline, seed=args.seed,
-                                  params0=params0, opt_state0=opt_state0,
-                                  planner=planner)
+    tracer = None
+    if getattr(args, "trace", False):
+        from repro.obs import Tracer
+        tracer = Tracer()
+    device_trace_dir = getattr(args, "device_trace_dir", "")
+    from repro.obs import device_trace
+    with device_trace(device_trace_dir):
+        params, report = train_capgnn(cfg, runtime, xplan, p, opt,
+                                      epochs=run_epochs, controller=ctl,
+                                      pipeline=args.pipeline, seed=args.seed,
+                                      params0=params0, opt_state0=opt_state0,
+                                      planner=planner, tracer=tracer)
     _, test_acc = runtime.evaluate(params, "test")
     out = {
         "dataset": args.dataset, "model": args.model, "parts": p,
@@ -132,8 +139,15 @@ def run_gnn(args) -> dict:
         "comm_reduction_vs_vanilla": report.comm_reduction,
         "refresh_steps": report.refresh_steps,
         "cached_steps": report.cached_steps,
+        # compile_s is the fenced step-0 time; wall_time_s is steady state
+        "compile_s": round(report.compile_s, 3),
         "wall_time_s": round(report.wall_time_s, 2),
     }
+    if tracer is not None:
+        paths = tracer.export(args.trace_dir, prefix="train")
+        out["phase_stats"] = report.phase_stats
+        out["trace_file"] = paths["trace"]
+        out["metrics_file"] = paths["metrics"]
     print(json.dumps(out, indent=1))
     if args.ckpt_dir:
         from repro.checkpoint import save_checkpoint
@@ -257,6 +271,17 @@ def main():
                    help="re-rank every k-th refresh (adaptive policies)")
     g.add_argument("--adaptive-staleness", action="store_true")
     g.add_argument("--cpu-cache-gib", type=float, default=4.0)
+    g.add_argument("--trace", action="store_true",
+                   help="enable the repro.obs tracer: per-step spans + "
+                        "typed counters, exported as a Perfetto-loadable "
+                        "Chrome trace and a JSONL metrics stream")
+    g.add_argument("--trace-dir", default="experiments",
+                   help="directory for trace_train.json / "
+                        "metrics_train.jsonl (with --trace)")
+    g.add_argument("--device-trace-dir", default="",
+                   help="opt-in jax.profiler.trace capture directory for "
+                        "device-side timelines (XPlane; open in "
+                        "TensorBoard/Perfetto)")
     g.add_argument("--seed", type=int, default=0)
     g.add_argument("--ckpt-dir", default="")
     g.add_argument("--resume", action="store_true",

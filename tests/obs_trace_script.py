@@ -1,0 +1,107 @@
+"""Subprocess helper for test_obs: runs the SPMD CaPGNN runtime on 4
+forced host devices under an enabled ``repro.obs.Tracer`` and checks that
+
+- the traced per-step counter totals equal ``TrainReport.comm_bytes`` /
+  ``comm_bytes_vanilla`` / ``host_fetch_rows`` / ``host_fetch_bytes`` /
+  ``host_writeback_bytes`` *exactly*, for the requested halo transport;
+- every scheduled step kind got a depth-0 span, spans nest strictly, and
+  the exported Chrome trace validates against the trace_event schema.
+
+Invoked as:  python tests/obs_trace_script.py
+                 [--transport allgather|p2p] [--features device|host]
+Prints OK and exits zero on success.
+"""
+import json
+import os
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=4 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+
+
+def main():
+    transport = (sys.argv[sys.argv.index("--transport") + 1]
+                 if "--transport" in sys.argv else "allgather")
+    features = (sys.argv[sys.argv.index("--features") + 1]
+                if "--features" in sys.argv else "device")
+    jax.devices()           # lock the forced host device count first
+    from repro.core import (CacheCapacity, StalenessController,
+                            build_cache_plan)
+    from repro.data.gnn_data import FullBatchTask, split_masks
+    from repro.dist import (build_exchange_plan, stack_partitions,
+                            train_capgnn)
+    from repro.dist.capgnn_spmd import make_spmd_runtime
+    from repro.graph import (build_partition, metis_partition, rmat,
+                             symmetric_normalize, synth_features)
+    from repro.models.gnn import GNNConfig
+    from repro.obs import SPAN_KINDS, Tracer, validate_chrome_trace
+    from repro.optim import adam
+
+    parts = 4
+    g = rmat(240, 1400, seed=7)
+    feats, labels = synth_features(g, 8, 4, seed=7)
+    gn = symmetric_normalize(g)
+    trm, va, te = split_masks(g.num_nodes, seed=7)
+    task = FullBatchTask(graph=gn, features=feats, labels=labels,
+                         train_mask=trm, val_mask=va, test_mask=te,
+                         num_classes=4)
+    ps = build_partition(gn, metis_partition(gn, parts, seed=7), hops=1)
+    cfg = GNNConfig(model="gcn", in_dim=8, hidden_dim=8, out_dim=4,
+                    num_layers=3)
+    # all three tiers non-empty so refresh/cached/host traffic all flow
+    max_halo = max(pt.n_halo for pt in ps.parts)
+    cap = CacheCapacity(c_gpu=[max(1, max_halo // 3)] * parts,
+                        c_cpu=max(1, max_halo))
+    plan = build_cache_plan(ps, cap, refresh_every=2)
+    xplan = build_exchange_plan(ps, plan)
+    sp = stack_partitions(ps, task)
+    opt = adam(1e-2)
+    mesh = jax.make_mesh((parts,), ("data",))
+    rt = make_spmd_runtime(cfg, sp, xplan, opt, mesh, transport=transport,
+                           features=features)
+
+    epochs = 6
+    tr = Tracer()
+    ctl = StalenessController(refresh_every=2)
+    _, rep = train_capgnn(cfg, rt, xplan, parts, opt, epochs=epochs,
+                          controller=ctl, pipeline=True, eval_every=0,
+                          tracer=tr)
+
+    tot = tr.totals()
+    assert tot["steps"] == epochs, (tot["steps"], epochs)
+    assert tot["wire_bytes"] == rep.comm_bytes, \
+        (transport, tot["wire_bytes"], rep.comm_bytes)
+    assert tot["wire_bytes_vanilla"] == rep.comm_bytes_vanilla
+    assert tot["host_fetch_rows"] == rep.host_fetch_rows, \
+        (transport, features, tot["host_fetch_rows"], rep.host_fetch_rows)
+    assert tot["host_fetch_bytes"] == rep.host_fetch_bytes
+    assert tot["host_writeback_bytes"] == rep.host_writeback_bytes
+    if features == "host":
+        assert rep.host_fetch_rows > 0, "host mode staged nothing"
+
+    # schedule refresh_every=2 over 6 epochs: refresh @0, pipelined @2,4
+    kinds = [c.kind for c in tr.counters]
+    assert kinds[0] == "refresh" and "pipelined" in kinds \
+        and "cached" in kinds, kinds
+    depth0 = [s for s in tr.spans if s.depth == 0]
+    assert [s.kind for s in depth0 if s.kind != "eval"] == kinds
+    assert all(s.kind in SPAN_KINDS or s.kind in ("h2d_put",)
+               for s in tr.spans), {s.kind for s in tr.spans}
+    assert rep.compile_s > 0 and rep.phase_stats
+
+    with tempfile.TemporaryDirectory() as d:
+        paths = tr.export(d, prefix="spmd")
+        with open(paths["trace"]) as f:
+            stats = validate_chrome_trace(json.load(f))
+    for k in ("refresh", "pipelined", "cached"):
+        assert stats["spans_by_cat"].get(k, 0) > 0, stats["spans_by_cat"]
+    assert stats["n_counters"] > 0
+    print(f"OK transport={transport} features={features} "
+          f"wire_bytes={rep.comm_bytes} host_rows={rep.host_fetch_rows}")
+
+
+if __name__ == "__main__":
+    main()
