@@ -24,14 +24,18 @@ classes:
 
 A suite present in the baseline but missing (or unreadable/failed) in the
 current summary is a regression — a crashed suite can no longer leave a
-stale green JSON behind.
+stale green JSON behind.  The reverse direction — summary keys the
+baseline doesn't know about — is printed as an explicit named diff so a
+renamed field can't silently escape the gate; it stays non-fatal unless
+``--strict-keys`` is passed.
 
 Refreshing the baseline (after an intentional perf/accounting change):
 run the gated suites with ``REPRO_BENCH_TINY=1`` exactly as CI does, then
 ``--update`` and commit the new ``experiments/baseline.json``:
 
     REPRO_BENCH_TINY=1 PYTHONPATH=src python -m benchmarks.run \
-        --only kernels_bench,comm_volume,serve_bench,adaptive_cache,heterogeneous,out_of_core
+        --only kernels_bench,comm_volume,serve_bench,adaptive_cache,\
+heterogeneous,out_of_core,fault_tolerance
     PYTHONPATH=src python -m benchmarks.check_regression --update
 """
 from __future__ import annotations
@@ -44,7 +48,8 @@ import sys
 DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments")
 # suites CI re-runs (REPRO_BENCH_TINY=1) before invoking this gate
 GATED_SUITES = ["kernels_bench", "comm_volume", "serve_bench",
-                "adaptive_cache", "heterogeneous", "out_of_core"]
+                "adaptive_cache", "heterogeneous", "out_of_core",
+                "fault_tolerance"]
 TIMING_SUFFIXES = ("_ms", "_s", "_seconds")
 TIMING_MARKERS = ("time", "qps", "tok", "wall", "p50", "p99", "speedup",
                   "overhead", "benefit", "_leq_")
@@ -115,6 +120,29 @@ def compare(baseline: dict, current: dict, float_rtol: float,
     return problems
 
 
+def new_keys(baseline: dict, current: dict) -> list[str]:
+    """The reverse key diff: ``suite.key`` entries present in the current
+    summary but absent from the baseline (new suites count whole).  These
+    are fields the gate silently ignores — surfaced as an explicit named
+    diff so a renamed key can't slip through as "baseline side missing +
+    current side unchecked"; ``--strict-keys`` turns them into failures."""
+    out: list[str] = []
+    for suite, fields in current.items():
+        if not isinstance(fields, dict):
+            continue
+        base = baseline.get(suite)
+        if not isinstance(base, dict):
+            out.append(f"{suite}: suite not in baseline")
+            continue
+        for key in fields:
+            if key in SKIP_KEYS:
+                continue
+            if key not in base:
+                out.append(f"{suite}.{key}: not in baseline "
+                           f"(current {fields[key]!r})")
+    return out
+
+
 def make_baseline(summary: dict, suites: list[str]) -> dict:
     out = {}
     for suite in suites:
@@ -142,6 +170,9 @@ def main(argv=None) -> int:
         os.environ.get("REPRO_REGRESSION_TIMING_FACTOR", "25")))
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the current summary")
+    ap.add_argument("--strict-keys", action="store_true",
+                    help="also fail on summary keys absent from the "
+                         "baseline (default: report them, stay green)")
     args = ap.parse_args(argv)
     suites = [s for s in args.suites.split(",") if s]
 
@@ -163,6 +194,17 @@ def main(argv=None) -> int:
     baseline = {k: v for k, v in baseline.items() if k in suites}
     problems = compare(baseline, summary, args.float_rtol,
                        args.timing_factor, err_atol=args.err_atol)
+    extra = new_keys(baseline, {k: v for k, v in summary.items()
+                                if k in suites})
+    if extra:
+        print("KEYS NOT IN BASELINE (unchecked by the gate):")
+        for e in extra:
+            print(f"  {e}")
+        if args.strict_keys:
+            problems.extend(f"[strict-keys] {e}" for e in extra)
+        else:
+            print("  (refresh with --update to start gating them, or pass "
+                  "--strict-keys to fail on this)")
     if problems:
         print("REGRESSIONS:")
         for p in problems:

@@ -23,7 +23,8 @@ import time
 
 SUITES = ["halo_obs", "cache_hit", "comm_volume", "rapa_balance",
           "heterogeneous", "convergence", "overall", "kernels_bench",
-          "serve_bench", "adaptive_cache", "out_of_core", "roofline"]
+          "serve_bench", "adaptive_cache", "out_of_core",
+          "fault_tolerance", "roofline"]
 
 _SUMMARY = "bench_summary"
 # not suite outputs: the folded summary itself and the regression baseline

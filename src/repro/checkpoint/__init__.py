@@ -1,3 +1,6 @@
-from .checkpoint import save_checkpoint, load_checkpoint, latest_step
+from .checkpoint import (CheckpointCorruptError, latest_step,
+                         load_checkpoint, save_checkpoint,
+                         verify_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "verify_checkpoint", "CheckpointCorruptError"]

@@ -4,23 +4,37 @@ Writes are atomic (tmp + rename).  Sharded arrays are gathered to host
 before save; on restore the caller re-shards via its own NamedSharding (we
 store only the logical arrays, which is the portable choice when restore
 topology differs from save topology — e.g. single-pod -> multi-pod).
+
+Integrity: the sidecar meta records a CRC32 of the npz payload bytes.
+``load_checkpoint`` validates it (raising :class:`CheckpointCorruptError`
+on mismatch / truncation), and ``latest_step`` skips corrupt or partial
+checkpoints, falling back to the newest valid one — so a crash mid-write
+or a damaged file degrades to "resume from the previous step" instead of
+a mid-restore explosion.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import zlib
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "verify_checkpoint", "CheckpointCorruptError"]
 
 _LEAF_KEY = "leaf_{:05d}"
 
 # npz only understands built-in numpy dtypes; ml_dtypes leaves (bfloat16,
 # fp8, ...) are stored as a same-width uint view + a dtype-name record.
 _UINT_OF_WIDTH = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+class CheckpointCorruptError(RuntimeError):
+    """Checkpoint payload failed integrity validation (bad checksum,
+    truncated file, or missing/corrupt sidecar meta)."""
 
 
 def _is_native_dtype(dt: np.dtype) -> bool:
@@ -44,6 +58,14 @@ def _decode(raw: np.ndarray, dtype_name: str) -> np.ndarray:
     return raw.view(np.dtype(getattr(jnp, dtype_name)))
 
 
+def _file_crc32(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while chunk := f.read(1 << 20):
+            crc = zlib.crc32(chunk, crc)
+    return crc
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves, treedef = jax.tree.flatten(tree)
@@ -54,10 +76,13 @@ def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         np.savez(f, **payload)
+    crc = _file_crc32(tmp)
+    nbytes = os.path.getsize(tmp)
     os.replace(tmp, path)
     meta = {"step": step, "num_leaves": len(host_leaves),
             "dtypes": [name for _, name in encoded],
-            "treedef": str(treedef)}
+            "treedef": str(treedef),
+            "payload_crc32": crc, "payload_bytes": nbytes}
     meta_path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")
     with open(meta_path + ".tmp", "w") as f:
         json.dump(meta, f)
@@ -65,12 +90,44 @@ def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
     return path
 
 
+def verify_checkpoint(ckpt_dir: str, step: int) -> dict:
+    """Validate one checkpoint's payload against its sidecar meta; returns
+    the meta dict on success, raises :class:`CheckpointCorruptError` on
+    a missing file, truncation, or checksum mismatch.  Metas written
+    before checksums existed (no ``payload_crc32`` key) pass unchecked —
+    old checkpoints stay loadable."""
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    meta_path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")
+    if not os.path.isfile(path):
+        raise CheckpointCorruptError(f"missing payload: {path}")
+    try:
+        with open(meta_path) as f:
+            meta = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"missing/corrupt sidecar meta: {meta_path}: {e}") from e
+    want_crc = meta.get("payload_crc32")
+    if want_crc is None:
+        return meta
+    nbytes = os.path.getsize(path)
+    if nbytes != meta.get("payload_bytes", nbytes):
+        raise CheckpointCorruptError(
+            f"{path}: truncated ({nbytes} bytes, "
+            f"expected {meta['payload_bytes']})")
+    got = _file_crc32(path)
+    if got != want_crc:
+        raise CheckpointCorruptError(
+            f"{path}: checksum mismatch "
+            f"(crc32 {got:#010x}, expected {want_crc:#010x})")
+    return meta
+
+
 def load_checkpoint(ckpt_dir: str, step: int, like):
-    """Restore into the structure of ``like`` (validates leaf count/shapes)."""
+    """Restore into the structure of ``like`` (validates leaf count/shapes
+    and the payload checksum recorded at save time)."""
+    meta = verify_checkpoint(ckpt_dir, step)
     path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
     data = np.load(path)
-    with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json")) as f:
-        meta = json.load(f)
     leaves, treedef = jax.tree.flatten(like)
     restored = [_decode(data[_LEAF_KEY.format(i)], meta["dtypes"][i])
                 for i in range(len(leaves))]
@@ -81,8 +138,22 @@ def load_checkpoint(ckpt_dir: str, step: int, like):
 
 
 def latest_step(ckpt_dir: str) -> int | None:
+    """Newest step with a *valid* checkpoint.  Corrupt or partial entries
+    (truncated payload, bad checksum, missing meta) are skipped with a
+    warning, falling back to the next-newest valid one — leftover
+    ``.tmp`` files from a crashed save never match at all."""
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
-             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
-    return max(steps) if steps else None
+    steps = sorted((int(m.group(1)) for f in os.listdir(ckpt_dir)
+                    if (m := re.match(r"ckpt_(\d+)\.npz$", f))),
+                   reverse=True)
+    for step in steps:
+        try:
+            verify_checkpoint(ckpt_dir, step)
+        except CheckpointCorruptError as e:
+            import warnings
+            warnings.warn(f"skipping corrupt checkpoint at step {step}: {e}",
+                          RuntimeWarning, stacklevel=2)
+            continue
+        return step
+    return None

@@ -440,6 +440,18 @@ class _StreamCache:
     def resident(self) -> set:
         return set(self._set) if self.policy == "fifo" else set(self._lru)
 
+    def resize(self, capacity: int) -> None:
+        """Shrink (or grow) the live capacity, evicting in policy order —
+        the memory-pressure backoff path
+        (:meth:`AdaptivePlanner.shrink_capacity`)."""
+        self.capacity = max(0, int(capacity))
+        if self.policy == "fifo":
+            while len(self._set) > self.capacity and self._fifo:
+                self._set.discard(self._fifo.popleft())
+        else:
+            while len(self._lru) > self.capacity:
+                self._lru.popitem(last=False)
+
 
 @dataclasses.dataclass
 class AdaptivePlanner:
@@ -634,6 +646,38 @@ class AdaptivePlanner:
             self._pad = exchange_capacity(self.ps, self.capacity)
         return build_exchange_plan(self.ps, plan or self.plan,
                                    pad_to=self._pad)
+
+    def shrink_capacity(self, factor: float) -> CacheCapacity:
+        """Memory-pressure backoff (:mod:`repro.faults`): scale every
+        cache budget by ``factor`` and rebuild the planner state under
+        the smaller budget, so the next :meth:`replan` emits a plan that
+        fits.  The exchange padding is pinned to the *pre-shrink*
+        capacity first — shrunk plans keep the original slot-stable
+        shape signature, so installing them never retraces the step."""
+        if not 0.0 < factor <= 1.0:
+            raise ValueError(f"shrink factor must be in (0, 1], "
+                             f"got {factor}")
+        from repro.dist.exchange import exchange_capacity
+        if not hasattr(self, "_pad"):
+            self._pad = exchange_capacity(self.ps, self.capacity)
+        self.capacity = CacheCapacity(
+            c_gpu=[int(c * factor) for c in self.capacity.c_gpu],
+            c_cpu=int(self.capacity.c_cpu * factor))
+        if self.policy in ("fifo", "lru"):
+            union = self.ps.halo_union()
+            for i, pt in enumerate(self.ps.parts):
+                self._local[i].resize(min(self.capacity.c_gpu[i],
+                                          pt.n_halo))
+            self._global.resize(min(self.capacity.c_cpu, union.size))
+        if self.policy == "static":
+            # static replan() returns the installed plan unchanged, so
+            # the shrink must rebuild it here to be load-bearing
+            self.plan = build_cache_plan(self.ps, self.capacity,
+                                         refresh_every=self.refresh_every,
+                                         policy="overlap_high",
+                                         seed=self.seed)
+            self._sync_membership()
+        return self.capacity
 
     def hit_rate(self) -> float:
         """Cumulative hit rate over every observed access."""

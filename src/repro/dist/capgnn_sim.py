@@ -40,6 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.staleness import StalenessController
+from repro.faults.guard import GuardConfig, TrainGuard
+from repro.faults.plan import NULL_FAULTS
 from repro.models.gnn import (EdgeListAdj, EllAdj, GNNConfig, HybridAdj,
                               _layer_apply, accuracy, cross_entropy_loss,
                               init_gnn)
@@ -295,6 +297,18 @@ class SimRuntime:
             self._state["tracer"] = tracer
         if self.host_store is not None:
             self.host_store.set_tracer(tracer)
+
+    def set_fault_guard(self, guard) -> None:
+        """Attach a :class:`repro.faults.FetchGuard`: the host-mode
+        staging wrappers route through its retry/degrade/stale-reuse
+        paths.  ``None`` (the default) keeps the original unguarded
+        staging code byte-for-byte.  No-op in device-feature mode."""
+        if self._state is not None:
+            self._state["fetch_guard"] = guard
+            if guard is not None and "l0loc" in self._state:
+                # the resident layer-0 local rows are the natural stale
+                # fallback for a failed re-stage at the next plan install
+                guard.last_good.setdefault("l0loc", self._state["l0loc"])
 
     def set_plan(self, xplan: ExchangePlan) -> None:
         """Install a re-ranked plan.  Under a capacity-padded (slot-stable)
@@ -606,10 +620,17 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
             slice of the host table.  One accounted fetch per plan install,
             then resident until the next re-plan."""
             hn = state["hostnp"]
-            sf = store.stage_rows((parts_idx, hn["loc_pos"]),
-                                  valid=hn["loc_valid"])
-            store.account_fetch(sf)
-            state["l0loc"] = sf.array
+
+            def stage():
+                return store.stage_rows((parts_idx, hn["loc_pos"]),
+                                        valid=hn["loc_valid"])
+            g = state.get("fetch_guard")
+            if g is None:
+                sf = stage()
+                store.account_fetch(sf)
+                state["l0loc"] = sf.array
+            else:
+                state["l0loc"] = g.fetch_sync(stage, store, "l0loc")
 
         def _stage_l0():
             hn = state["hostnp"]
@@ -619,25 +640,48 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
         def _take_l0():
             """Pop the oldest in-flight layer-0 fetch (or stage one cold)
             and account it — accounting happens at consumption, so flushed
-            prefetches never count."""
+            prefetches never count.  With a fault guard attached the cold
+            path retries with backoff and past the budget serves the
+            previous step's rows (stale reuse)."""
             ring = state["l0_ring"]
-            sf = ring.popleft() if ring else _stage_l0()
-            store.account_fetch(sf)
-            return sf.array
+            g = state.get("fetch_guard")
+            if g is None:
+                sf = ring.popleft() if ring else _stage_l0()
+                store.account_fetch(sf)
+                return sf.array
+            if ring:
+                return g.consume(ring.popleft(), store, "l0")
+            return g.fetch_sync(_stage_l0, store, "l0")
 
         def _prefetch_l0():
             """Refill the double buffer: keep the *next* step's host rows
-            ``device_put``-in-flight while the current step computes."""
+            ``device_put``-in-flight while the current step computes.
+            Under an active fault guard a failed or slow fetch suspends
+            the refill — consumption degrades to synchronous staging."""
             ring = state["l0_ring"]
+            g = state.get("fetch_guard")
+            if g is not None and not g.prefetch_ok():
+                return
             while len(ring) < max(1, store.prefetch_depth - 1):
-                ring.append(_stage_l0())
+                if g is None:
+                    ring.append(_stage_l0())
+                else:
+                    sf = g.try_stage(_stage_l0)
+                    if sf is None:
+                        return
+                    ring.append(sf)
 
         def _take_gl():
+            g = state.get("fetch_guard")
             out = []
             for li in range(n_ex):
-                sf = store.stage_buf(li)
-                store.account_fetch(sf)
-                out.append(sf.array)
+                if g is None:
+                    sf = store.stage_buf(li)
+                    store.account_fetch(sf)
+                    out.append(sf.array)
+                else:
+                    out.append(g.fetch_sync(
+                        lambda li=li: store.stage_buf(li), store, f"gl{li}"))
             return out
 
         def _writeback(host_out):
@@ -793,6 +837,14 @@ class TrainReport:
     # per step-kind {count, p50_ms, p99_ms, total_s} from the tracer's
     # depth-0 spans; None on untraced runs (timing them would add syncs)
     phase_stats: dict | None = None
+    # fault-injection accounting (repro.faults): per-kind injected event
+    # counts and the run's DefenseEvents totals; None on clean runs.
+    # The fault-tolerance suite asserts the matched pairs are EQUAL —
+    # fetch_drop==fetch_errors, fetch_delay==slow_fetches,
+    # halo_corrupt==corruptions_detected, grad_nan==rollbacks,
+    # mem_pressure==mem_backoffs.
+    faults_injected: dict | None = None
+    fault_events: dict | None = None
 
 
 def _step_rows(x_read: ExchangePlan, x_emit: ExchangePlan,
@@ -811,7 +863,8 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
                  eval_every: int = 0, controller: StalenessController | None = None,
                  pipeline: bool = False, seed: int = 0,
                  params0=None, opt_state0=None, planner=None,
-                 tracer=None) -> tuple[list, TrainReport]:
+                 tracer=None, faults=None,
+                 guard=None) -> tuple[list, TrainReport]:
     """Full-batch CaPGNN training under the staleness schedule.
 
     One step per epoch (full batch).  Per-step bytes are the plan's exact
@@ -851,6 +904,22 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     ``params0``/``opt_state0`` resume from checkpointed state instead of a
     fresh init (the staleness schedule restarts, whose first step is a
     refresh — required anyway since the caches start zero-filled).
+
+    ``faults`` (a :class:`repro.faults.FaultPlan`) arms deterministic
+    fault injection; ``guard`` (a :class:`repro.faults.GuardConfig`)
+    configures the defenses — fetch retry/stale-reuse (via the runtime's
+    ``set_fault_guard``), the divergence guard (per-step loss finiteness
+    plus a fenced parameter sweep + snapshot every ``guard_every`` steps,
+    rolling back and forcing a plain refresh on divergence), opt-in
+    per-tier payload checksums (corruption forces a refresh of the
+    affected tier), and memory-pressure capacity backoff (requires
+    ``planner``).  With the default disabled plan and no guard, this loop
+    is byte-for-byte the pre-faults code path: no extra sync points, no
+    behavior change.  Guard-forced refreshes replace pipelined/transition
+    steps with *plain* refreshes — a poisoned stale tier must never be
+    consumed.  Injected and defended event counts land in the report
+    (``faults_injected`` / ``fault_events``) and as per-step
+    :class:`~repro.obs.StepCounters` fields.
     """
     if controller is None:
         controller = StalenessController(refresh_every=xplan.refresh_every)
@@ -871,6 +940,26 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     if tr.enabled and hasattr(runtime, "set_tracer"):
         runtime.set_tracer(tr)
 
+    fa = faults if faults is not None else NULL_FAULTS
+    if fa.enabled and fa.has("mem_pressure") and planner is None:
+        raise ValueError(
+            "mem_pressure faults need an AdaptivePlanner: the backoff "
+            "defense shrinks capacity and replans through it")
+    gd = None
+    ev_snap = inj_snap = None
+    if fa.enabled or guard is not None:
+        gd = TrainGuard(guard if guard is not None else GuardConfig(),
+                        store=store)
+        if hasattr(runtime, "set_fault_guard"):
+            runtime.set_fault_guard(gd.fetch_guard)
+        if fa.enabled and store is not None:
+            store.set_faults(fa)
+        if gd.cfg.guard_every > 0:
+            gd.snapshot(-1, params, opt_state)   # rollback floor
+        gd.seal(caches)                          # checksum baseline
+        ev_snap = gd.events.as_dict()
+        inj_snap = fa.total_injected()
+
     losses: list[float] = []
     val_acc: list[float] = []
     comm = 0
@@ -883,13 +972,39 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     step_snap = (store.snapshot()
                  if store is not None and tr.enabled else None)
     compile_s = 0.0
+    pending_refresh = False   # guard-forced refresh for the NEXT step
     t0 = time.perf_counter()
     for e in range(epochs):
+        force_refresh, pending_refresh = pending_refresh, False
+        mem = False
+        if fa.enabled:
+            fa.begin_step(e)
+            params = fa.corrupt_params(params)
+            caches, _ = fa.corrupt_caches(caches, store)
+            mem = fa.mem_pressure()
+        if gd is not None and gd.cfg.checksums:
+            with tr.span("integrity", step=e):
+                corrupted = gd.verify(caches)
+            if corrupted:
+                force_refresh = True
         refresh = controller.should_refresh()
         replan = planner is not None and controller.should_replan()
+        if mem:
+            # memory-pressure backoff: shrink the cache capacity and
+            # replan through the slot-stable machinery this very step
+            with tr.span("mem_backoff", step=e):
+                planner.shrink_capacity(gd.cfg.mem_backoff_factor)
+            gd.events.mem_backoffs += 1
+            replan = True
+        if force_refresh:
+            gd.events.forced_refreshes += 1
+        refresh = refresh or force_refresh or mem
+        # a guard-forced refresh must be a PLAIN refresh: pipelined /
+        # transition flavours consume the stale tiers being quarantined
         if replan:
-            kind = "transition" if pipeline else "refresh"
-        elif refresh and pipeline and controller.step > 0:
+            kind = ("transition" if pipeline and not force_refresh
+                    else "refresh")
+        elif refresh and pipeline and controller.step > 0 and not force_refresh:
             kind = "pipelined"
         elif refresh:
             kind = "refresh"
@@ -899,7 +1014,7 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
             if replan:
                 with tr.span("replan", step=e):
                     x_next = planner.exchange_plan(planner.replan())
-                if pipeline:
+                if pipeline and not force_refresh:
                     # transition step: consume/exchange on the old plan,
                     # prefetch the new plan's tier rows in the ring windows
                     params, opt_state, caches, m = runtime.step_transition(
@@ -914,7 +1029,8 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
                 x_active = x_next
                 replan_events += 1
             else:
-                if refresh and pipeline and controller.step > 0:
+                if (refresh and pipeline and controller.step > 0
+                        and not force_refresh):
                     step_fn = runtime.step_pipelined
                 elif refresh:
                     step_fn = runtime.step_refresh
@@ -935,13 +1051,31 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
         comm += step_rows * dim_bytes
         vanilla += xplan.total_halo * dim_bytes
         refresh_steps += int(refresh)
+        # divergence guard: the loss is already a host float (free check
+        # every step); the fenced parameter sweep + snapshot run on the
+        # guard_every cadence.  Divergence rolls back to the last good
+        # snapshot and forces the next step to be a plain refresh.
+        diverged = False
+        if gd is not None and gd.cfg.guard_every > 0:
+            diverged = not np.isfinite(losses[-1])
+            if not diverged and (e + 1) % gd.cfg.guard_every == 0:
+                with tr.span("divergence_check", step=e):
+                    diverged = not gd.params_finite(params)
+                if not diverged:
+                    gd.snapshot(e, params, opt_state)
+            if diverged:
+                with tr.span("rollback", step=e):
+                    params, opt_state = gd.rollback(params, opt_state)
+                pending_refresh = True
         # On a transition step the fresh rows are laid out for the NEW plan
         # while the compared caches hold the OLD plan's rows, so the drift
-        # metrics compare different vertices — skip them entirely there.
-        drift = (float(m["drift"]) if "drift" in m and not replan else None)
+        # metrics compare different vertices — skip them entirely there
+        # (and on diverged steps, whose drift is non-finite).
+        drift = (float(m["drift"])
+                 if "drift" in m and not replan and not diverged else None)
         if planner is not None:
             planner.observe_step(layers=max(1, len(dims)))
-            if "drift_local_rows" in m and not replan:
+            if "drift_local_rows" in m and not replan and not diverged:
                 planner.observe_drift(np.asarray(m["drift_local_rows"]),
                                       np.asarray(m["drift_global_rows"]))
         controller.observe(drift, refreshed=refresh)
@@ -959,6 +1093,14 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
             if refreshed_tiers or rows_by_worker is None:
                 rows_by_worker = [int(n) for n in np.asarray(
                     x_read.uncached.recv_valid).sum(axis=1)]
+            extra = {}
+            if gd is not None:
+                # per-step defense/injection deltas: the stream sums to
+                # the report's fault_events / faults_injected exactly
+                extra = gd.events.delta(ev_snap)
+                ev_snap = gd.events.as_dict()
+                extra["faults_injected"] = fa.total_injected() - inj_snap
+                inj_snap = fa.total_injected()
             tr.count(StepCounters(
                 step=e, kind=kind,
                 wire_rows_uncached=x_read.uncached.n_rows,
@@ -979,8 +1121,14 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
                 host_writeback_rows=int(sd.get("writeback_rows", 0)),
                 host_writeback_bytes=int(sd.get("writeback_bytes", 0)),
                 device_peak_bytes=device_peak_bytes(),
-                wire_rows_by_worker=rows_by_worker))
+                wire_rows_by_worker=rows_by_worker, **extra))
+        if gd is not None and gd.cfg.checksums:
+            # seal the post-step tier payloads: the digests the next
+            # consuming step must still observe
+            with tr.span("integrity", step=e):
+                gd.seal(caches)
     wall = time.perf_counter() - t0
+    fa.end_run()
 
     # note: eval_every runs also consume accounted host fetches, so pin
     # eval_every=0 when asserting the plan-rows == staged-rows identity
@@ -997,5 +1145,7 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
         host_fetch_bytes=int(hostd.get("fetch_bytes", 0)),
         host_writeback_bytes=int(hostd.get("writeback_bytes", 0)),
         compile_s=compile_s,
+        faults_injected=dict(fa.injected) if fa.enabled else None,
+        fault_events=gd.events.as_dict() if gd is not None else None,
         phase_stats=tr.phase_stats() if tr.enabled else None)
     return params, report

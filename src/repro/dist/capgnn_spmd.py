@@ -218,6 +218,14 @@ class SpmdRuntime:
         if self.host_store is not None:
             self.host_store.set_tracer(tracer)
 
+    def set_fault_guard(self, guard) -> None:
+        """Attach a :class:`repro.faults.FetchGuard` (see
+        :meth:`repro.dist.SimRuntime.set_fault_guard`)."""
+        if self._state is not None:
+            self._state["fetch_guard"] = guard
+            if guard is not None and "l0loc" in self._state:
+                guard.last_good.setdefault("l0loc", self._state["l0loc"])
+
     def wire_rows(self, refresh: bool, padded: bool = False) -> dict:
         """Rows this runtime's transport moves in one layer exchange (see
         :meth:`repro.dist.ExchangePlan.transport_rows`)."""
@@ -660,10 +668,18 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
 
         def _stage_l0loc():
             hn = state["hostnp"]
-            sf = store.stage_rows((parts_idx, hn["loc_pos"]),
-                                  valid=hn["loc_valid"], device=shard_parts)
-            store.account_fetch(sf)
-            state["l0loc"] = sf.array
+
+            def stage():
+                return store.stage_rows((parts_idx, hn["loc_pos"]),
+                                        valid=hn["loc_valid"],
+                                        device=shard_parts)
+            g = state.get("fetch_guard")
+            if g is None:
+                sf = stage()
+                store.account_fetch(sf)
+                state["l0loc"] = sf.array
+            else:
+                state["l0loc"] = g.fetch_sync(stage, store, "l0loc")
 
         def _stage_l0():
             hn = state["hostnp"]
@@ -672,22 +688,43 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                                     device=shard_parts)
 
         def _take_l0():
+            # fault-guard semantics mirror the sim runtime's _take_l0
             ring = state["l0_ring"]
-            sf = ring.popleft() if ring else _stage_l0()
-            store.account_fetch(sf)
-            return sf.array
+            g = state.get("fetch_guard")
+            if g is None:
+                sf = ring.popleft() if ring else _stage_l0()
+                store.account_fetch(sf)
+                return sf.array
+            if ring:
+                return g.consume(ring.popleft(), store, "l0")
+            return g.fetch_sync(_stage_l0, store, "l0")
 
         def _prefetch_l0():
             ring = state["l0_ring"]
+            g = state.get("fetch_guard")
+            if g is not None and not g.prefetch_ok():
+                return
             while len(ring) < max(1, store.prefetch_depth - 1):
-                ring.append(_stage_l0())
+                if g is None:
+                    ring.append(_stage_l0())
+                else:
+                    sf = g.try_stage(_stage_l0)
+                    if sf is None:
+                        return
+                    ring.append(sf)
 
         def _take_gl():
+            g = state.get("fetch_guard")
             out = []
             for li in range(n_ex):
-                sf = store.stage_buf(li, device=shard_rep)
-                store.account_fetch(sf)
-                out.append(sf.array)
+                if g is None:
+                    sf = store.stage_buf(li, device=shard_rep)
+                    store.account_fetch(sf)
+                    out.append(sf.array)
+                else:
+                    out.append(g.fetch_sync(
+                        lambda li=li: store.stage_buf(li, device=shard_rep),
+                        store, f"gl{li}"))
             return out
 
         def _writeback(host_out):

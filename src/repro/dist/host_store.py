@@ -47,6 +47,7 @@ from collections import deque
 
 import numpy as np
 
+from repro.faults.plan import NULL_FAULTS
 from repro.obs.tracer import NULL_TRACER
 
 __all__ = ["HostFeatureStore", "StagedFetch", "halo_dtype_info",
@@ -118,12 +119,21 @@ class HostFeatureStore:
                       "writebacks": 0, "writeback_rows": 0,
                       "writeback_bytes": 0, "gather_s": 0.0}
         self.tracer = NULL_TRACER
+        self.faults = NULL_FAULTS
 
     def set_tracer(self, tracer) -> None:
         """Attach a :class:`repro.obs.Tracer`: every h2d dispatch records
         an ``h2d_put`` sub-span (nested inside whatever staging span the
         caller holds open).  Default is the shared no-op tracer."""
         self.tracer = tracer
+
+    def set_faults(self, faults) -> None:
+        """Attach a :class:`repro.faults.FaultPlan`: every stage op
+        consults it once (``on_fetch`` — injected drops raise
+        :class:`repro.faults.FetchError`, injected delays stall the host
+        gather).  Default is the shared disabled plan, whose consult is a
+        single attribute check."""
+        self.faults = faults
 
     # -- staging -----------------------------------------------------------
 
@@ -158,6 +168,11 @@ class HostFeatureStore:
         caller accounts via :meth:`account_fetch` when consumed.
         """
         t0 = time.perf_counter()
+        # injected delays land inside the timed gather window, so the
+        # slow-fetch defense observes them through ``gather_s`` like any
+        # genuinely slow host gather would
+        if self.faults.enabled:
+            self.faults.on_fetch()
         rows = self.feat[idx]
         if valid is not None:
             rows = np.where(np.asarray(valid)[..., None], rows, 0.0)
@@ -207,6 +222,8 @@ class HostFeatureStore:
                            "never written back; run a refresh step first")
         rows, n_valid = self._bufs[layer]
         t0 = time.perf_counter()
+        if self.faults.enabled:
+            self.faults.on_fetch()
         payload = self._cast(rows)
         gather_s = time.perf_counter() - t0
         return StagedFetch(array=self._put(payload, device), rows=n_valid,
@@ -220,6 +237,24 @@ class HostFeatureStore:
 
     def has_buf(self, layer: int) -> bool:
         return layer in self._bufs
+
+    def buf_layers(self) -> list[int]:
+        """Exchange layers with a host-resident global buffer — the
+        host-side tier set the integrity checksums cover."""
+        return sorted(self._bufs)
+
+    def buf_table(self, layer: int) -> np.ndarray:
+        """Read-only view of one layer's host buffer (integrity digests
+        and fault injection; do **not** mutate — staged payloads may
+        alias it, see the module docstring's zero-copy caveat)."""
+        return self._bufs[layer][0]
+
+    def set_buf(self, layer: int, rows: np.ndarray) -> None:
+        """Replace one layer's buffer *storage* keeping its valid count —
+        the corruption injector swaps in a modified copy instead of
+        mutating in place (staged payloads may alias the old storage)."""
+        _, n_valid = self._bufs[layer]
+        self._bufs[layer] = (np.ascontiguousarray(rows, np.float32), n_valid)
 
     # -- accounting --------------------------------------------------------
 

@@ -1,0 +1,23 @@
+"""Deterministic fault injection + graceful-degradation guards.
+
+``FaultPlan`` (:mod:`repro.faults.plan`) injects seeded faults at chosen
+training steps — dropped/delayed host-store fetches, corrupted halo
+payload rows, NaN gradients, simulated device-memory pressure, truncated
+checkpoints.  ``GuardConfig``/``TrainGuard``/``FetchGuard``
+(:mod:`repro.faults.guard`) are the runtime defenses each fault class
+proves out.  Every injected fault and every defense action is counted, so
+``injected == defended`` holds exactly (asserted by
+``benchmarks/fault_tolerance.py`` and the tier-1 suite).
+
+Zero-overhead contract (same as the disabled ``repro.obs.Tracer``): the
+shared :data:`NULL_FAULTS` plan is a no-op — with it installed and no
+guard configured, the training loop and both runtimes execute the exact
+code paths they did before this package existed.
+"""
+from .plan import (FAULT_KINDS, FaultPlan, FaultSpec, FetchError,
+                   NULL_FAULTS)
+from .guard import DefenseEvents, FetchGuard, GuardConfig, TrainGuard
+
+__all__ = ["FAULT_KINDS", "FaultPlan", "FaultSpec", "FetchError",
+           "NULL_FAULTS", "DefenseEvents", "FetchGuard", "GuardConfig",
+           "TrainGuard"]

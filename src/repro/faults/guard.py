@@ -1,0 +1,231 @@
+"""Runtime defenses for the :mod:`repro.faults` fault classes.
+
+Three cooperating pieces, all sharing one :class:`DefenseEvents` counter
+block so every degradation is exactly countable against the injector's
+ledger:
+
+- :class:`FetchGuard` — wraps the runtimes' host-store staging paths:
+  bounded retry with exponential backoff on a failed fetch, degradation
+  from prefetch-ahead to synchronous fetching after a slow/failed fetch,
+  and past the retry budget *stale-tier reuse* — the consuming step is
+  served the previous refresh's rows (DistGNN-style bounded staleness)
+  instead of crashing, with the staleness event counted.
+- :class:`TrainGuard` — train-loop defenses: a divergence guard (free
+  per-step loss finiteness check + a fenced parameter finiteness check
+  every ``guard_every`` steps) that rolls back to the last good in-memory
+  snapshot and restages with a forced refresh; opt-in per-tier payload
+  checksums over the exchange/stale buffers that detect corrupted rows
+  before a step consumes them and force a refresh of the affected tier.
+- :class:`GuardConfig` — the knobs, surfaced as ``launch.train gnn
+  --guard-every k --fetch-retries n --checksums``.
+
+Memory-pressure backoff lives in the loop itself (it needs the
+``AdaptivePlanner``): see ``train_capgnn`` and
+:meth:`repro.core.jaca.AdaptivePlanner.shrink_capacity`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+
+import numpy as np
+
+from .plan import FetchError
+
+__all__ = ["DefenseEvents", "FetchGuard", "GuardConfig", "TrainGuard"]
+
+
+@dataclasses.dataclass
+class GuardConfig:
+    """Defense knobs (see module docstring).  ``guard_every=0`` disables
+    the divergence guard; ``checksums=False`` skips tier digests."""
+    guard_every: int = 0        # snapshot + fenced finiteness cadence
+    fetch_retries: int = 2      # extra attempts after a failed fetch
+    fetch_timeout_s: float = 0.1   # gather slower than this counts as slow
+    fetch_backoff_s: float = 0.01  # base retry backoff (doubles per retry)
+    degrade_steps: int = 2      # steps to run synchronous after a slow fetch
+    checksums: bool = False     # per-tier payload digests + verify
+    mem_backoff_factor: float = 0.5  # capacity shrink per pressure event
+
+
+@dataclasses.dataclass
+class DefenseEvents:
+    """Monotone defense counters.  Field names match the
+    :class:`repro.obs.StepCounters` fault fields one-to-one so the loop
+    can attribute per-step deltas directly."""
+    fetch_errors: int = 0            # failed stage attempts caught
+    fetch_retries: int = 0           # retry attempts issued
+    fetch_stale_reuse: int = 0       # consumptions served stale rows
+    slow_fetches: int = 0            # gathers over the timeout
+    prefetch_degraded_steps: int = 0  # steps run without prefetch-ahead
+    corruptions_detected: int = 0    # tier digests that failed verify
+    forced_refreshes: int = 0        # guard-forced refresh steps
+    rollbacks: int = 0               # divergence rollbacks
+    mem_backoffs: int = 0            # capacity-shrink replans
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def delta(self, before: dict) -> dict:
+        now = self.as_dict()
+        return {k: now[k] - before.get(k, 0) for k in now}
+
+
+class FetchGuard:
+    """Retry/degrade/stale-reuse wrapper around host-store staging (see
+    module docstring).  Attached to a runtime via ``set_fault_guard``;
+    with none attached the staging paths are byte-for-byte the original
+    code."""
+
+    def __init__(self, cfg: GuardConfig, events: DefenseEvents):
+        self.cfg = cfg
+        self.events = events
+        self.last_good: dict = {}   # key -> last consumed device rows
+        self._degraded = 0          # steps left with prefetch suspended
+
+    # -- consumption ---------------------------------------------------------
+
+    def consume(self, sf, store, key: str):
+        """Account one successfully staged fetch, remember its rows as the
+        stale fallback for ``key``, and flag slow gathers (degrading to
+        synchronous staging for ``degrade_steps`` steps)."""
+        store.account_fetch(sf)
+        if sf.gather_s > self.cfg.fetch_timeout_s:
+            self.events.slow_fetches += 1
+            self._degraded = self.cfg.degrade_steps
+        self.last_good[key] = sf.array
+        return sf.array
+
+    def fetch_sync(self, stage_fn, store, key: str):
+        """Synchronous staged fetch with bounded retry + backoff; past the
+        budget, serve the previous refresh's rows (stale-tier reuse)."""
+        attempts = 1 + max(0, self.cfg.fetch_retries)
+        for i in range(attempts):
+            if i > 0:
+                self.events.fetch_retries += 1
+                with store.tracer.span("fetch_retry", attempt=i, key=key):
+                    time.sleep(self.cfg.fetch_backoff_s * (2 ** (i - 1)))
+            try:
+                sf = stage_fn()
+            except FetchError:
+                self.events.fetch_errors += 1
+                continue
+            return self.consume(sf, store, key)
+        stale = self.last_good.get(key)
+        if stale is None:
+            raise FetchError(
+                f"host fetch {key!r} failed after {attempts} attempts and "
+                "no previously consumed rows exist to reuse")
+        self.events.fetch_stale_reuse += 1
+        return stale
+
+    # -- prefetch ------------------------------------------------------------
+
+    def try_stage(self, stage_fn):
+        """Prefetch-path staging: a failure is caught and counted, the
+        ring stays short, and consumption degrades to the synchronous
+        retry path above."""
+        try:
+            return stage_fn()
+        except FetchError:
+            self.events.fetch_errors += 1
+            return None
+
+    def prefetch_ok(self) -> bool:
+        """One call per step from the prefetch refill: while degraded,
+        skip refilling (synchronous mode) and count the step."""
+        if self._degraded > 0:
+            self._degraded -= 1
+            self.events.prefetch_degraded_steps += 1
+            return False
+        return True
+
+
+def _digest(arr) -> int:
+    """Content digest of one tier payload (crc32 over the raw bytes;
+    device arrays are fenced to the host — the checksum defense is
+    opt-in precisely because of this sync)."""
+    return zlib.crc32(np.ascontiguousarray(np.asarray(arr)).tobytes())
+
+
+def tier_digests(caches: dict, store=None) -> dict:
+    """Per-tier payload digests over the stale exchange buffers: device
+    local/global caches plus host-resident global buffers."""
+    d = {}
+    for li, c in enumerate(caches["local"]):
+        d[f"local{li}"] = _digest(c)
+    for li, c in enumerate(caches["global"]):
+        d[f"global{li}"] = _digest(c)
+    if store is not None:
+        for li in store.buf_layers():
+            d[f"hostbuf{li}"] = _digest(store.buf_table(li))
+    return d
+
+
+class TrainGuard:
+    """Train-loop defense state: checksum seal/verify + divergence
+    snapshot/rollback.  Owns the run's :class:`DefenseEvents` and the
+    :class:`FetchGuard` the runtimes consult."""
+
+    def __init__(self, cfg: GuardConfig, store=None):
+        self.cfg = cfg
+        self.store = store
+        self.events = DefenseEvents()
+        self.fetch_guard = FetchGuard(cfg, self.events)
+        self._sealed: dict | None = None
+        self._snap = None           # (params, opt_state) host copies
+
+    # -- payload checksums -----------------------------------------------
+
+    def seal(self, caches: dict) -> None:
+        """Record the post-step tier digests (the values the next
+        consuming step must still observe)."""
+        if self.cfg.checksums:
+            self._sealed = tier_digests(caches, self.store)
+
+    def verify(self, caches: dict) -> list[str]:
+        """Compare current tier digests against the seal; returns the
+        corrupted tier names (each counted as one detection)."""
+        if not self.cfg.checksums or self._sealed is None:
+            return []
+        now = tier_digests(caches, self.store)
+        bad = [k for k, v in self._sealed.items() if now.get(k) != v]
+        self.events.corruptions_detected += len(bad)
+        return bad
+
+    # -- divergence guard --------------------------------------------------
+
+    def snapshot(self, step: int, params, opt_state) -> None:
+        """Fenced host copy of the training state — the rollback target."""
+        import jax
+        self._snap = (step, jax.tree.map(np.asarray, params),
+                      jax.tree.map(np.asarray, opt_state))
+
+    def params_finite(self, params) -> bool:
+        """Fenced finiteness sweep over the parameter leaves."""
+        import jax
+        return all(bool(np.isfinite(np.asarray(leaf)).all())
+                   for leaf in jax.tree.leaves(params))
+
+    def rollback(self, params, opt_state):
+        """Restore the last good snapshot (placed back with the live
+        leaves' shardings so donation stays clean).  The caller must run
+        the next step as a plain refresh: the caches emitted alongside the
+        divergent update are poisoned and a refresh rewrites every tier
+        without consuming any of them."""
+        import jax
+        if self._snap is None:
+            raise RuntimeError("divergence detected before any snapshot; "
+                               "guard_every must take an initial snapshot")
+        _, snap_p, snap_o = self._snap
+
+        def put(snap, like):
+            return jax.tree.map(
+                lambda s, l: jax.device_put(s, l.sharding), snap, like)
+        self.events.rollbacks += 1
+        return put(snap_p, params), put(snap_o, opt_state)
+
+    @property
+    def snap_step(self) -> int | None:
+        return self._snap[0] if self._snap is not None else None

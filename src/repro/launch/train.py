@@ -107,6 +107,27 @@ def run_gnn(args) -> dict:
             params0, opt_state0 = state["params"], state["opt_state"]
             start_epoch = step
     run_epochs = max(0, args.epochs - start_epoch)
+
+    # fault injection + graceful degradation (repro.faults): a --faults
+    # spec enables seeded injectors; any of the defense knobs builds a
+    # TrainGuard even without injected faults (defense-only runs)
+    faults_spec = getattr(args, "faults", "")
+    guard_every = int(getattr(args, "guard_every", 0) or 0)
+    fetch_retries = getattr(args, "fetch_retries", None)
+    checksums = bool(getattr(args, "checksums", False))
+    faults = guard = None
+    if faults_spec:
+        from repro.faults import FaultPlan
+        faults = FaultPlan.parse(faults_spec, seed=args.seed)
+    if (faults is not None or guard_every or checksums
+            or fetch_retries is not None):
+        from repro.faults import GuardConfig
+        guard = GuardConfig(
+            guard_every=guard_every,
+            fetch_retries=(2 if fetch_retries is None
+                           else int(fetch_retries)),
+            checksums=checksums)
+
     tracer = None
     if getattr(args, "trace", False):
         from repro.obs import Tracer
@@ -118,7 +139,8 @@ def run_gnn(args) -> dict:
                                       epochs=run_epochs, controller=ctl,
                                       pipeline=args.pipeline, seed=args.seed,
                                       params0=params0, opt_state0=opt_state0,
-                                      planner=planner, tracer=tracer)
+                                      planner=planner, tracer=tracer,
+                                      faults=faults, guard=guard)
     _, test_acc = runtime.evaluate(params, "test")
     out = {
         "dataset": args.dataset, "model": args.model, "parts": p,
@@ -143,6 +165,10 @@ def run_gnn(args) -> dict:
         "compile_s": round(report.compile_s, 3),
         "wall_time_s": round(report.wall_time_s, 2),
     }
+    if report.fault_events is not None:
+        out["faults"] = (faults.spec_string() if faults is not None else "")
+        out["faults_injected"] = report.faults_injected
+        out["fault_events"] = report.fault_events
     if tracer is not None:
         paths = tracer.export(args.trace_dir, prefix="train")
         out["phase_stats"] = report.phase_stats
@@ -282,6 +308,28 @@ def main():
                    help="opt-in jax.profiler.trace capture directory for "
                         "device-side timelines (XPlane; open in "
                         "TensorBoard/Perfetto)")
+    g.add_argument("--faults", default="",
+                   help="fault-injection spec, e.g. "
+                        "'grad_nan@3;fetch_drop@2,5:rows=4' — clauses "
+                        "kind@step,step[:key=val,...] joined by ';' "
+                        "(kinds: fetch_drop fetch_delay halo_corrupt "
+                        "grad_nan mem_pressure ckpt_truncate); seeded "
+                        "by --seed, deterministic")
+    g.add_argument("--guard-every", type=int, default=0,
+                   help="divergence guard cadence: check param finiteness "
+                        "and snapshot a rollback point every k steps "
+                        "(0 = guard off; non-finite losses are checked "
+                        "every step when on)")
+    g.add_argument("--fetch-retries", type=int, default=None,
+                   help="bounded retries for failed host-store fetches "
+                        "before degrading to stale-tier reuse (enables "
+                        "the fetch guard; default 2 when any fault/guard "
+                        "flag is set)")
+    g.add_argument("--checksums", action="store_true",
+                   help="per-tier payload checksums on exchange/cache "
+                        "buffers: verify before each step, force a plain "
+                        "refresh of corrupted tiers (opt-in: adds a fenced "
+                        "d2h digest per step)")
     g.add_argument("--seed", type=int, default=0)
     g.add_argument("--ckpt-dir", default="")
     g.add_argument("--resume", action="store_true",

@@ -15,13 +15,19 @@ import json
 __all__ = ["chrome_trace_events", "write_chrome_trace",
            "write_metrics_jsonl", "validate_chrome_trace"]
 
-# aggregate counter tracks emitted per StepCounters record (pid 0)
+# aggregate counter tracks emitted per StepCounters record (pid 0);
+# fault/defense fields are None on clean runs, so they only render as
+# tracks when a FaultPlan / guard was active
 _COUNTER_FIELDS = ("wire_bytes", "wire_rows_uncached", "wire_rows_local",
                    "wire_rows_global", "host_fetch_rows",
                    "host_fetch_bytes", "host_writeback_bytes",
                    "cache_hit_rate", "planner_hit_rate", "drift",
                    "device_peak_bytes", "queries", "hot_hits", "host_hits",
-                   "fresh_recomputes")
+                   "fresh_recomputes",
+                   "faults_injected", "fetch_errors", "fetch_retries",
+                   "fetch_stale_reuse", "slow_fetches",
+                   "prefetch_degraded_steps", "corruptions_detected",
+                   "forced_refreshes", "rollbacks", "mem_backoffs")
 # serve records carry only the query-path counters — the training wire
 # fields are structurally zero there and would render as flat-0 tracks
 _SERVE_FIELDS = ("queries", "hot_hits", "host_hits", "fresh_recomputes",

@@ -23,9 +23,13 @@ __all__ = ["Tracer", "Span", "StepCounters", "NULL_TRACER",
 
 # top-level step flavours of the training loop (depth-0 spans)
 STEP_KINDS = ("refresh", "cached", "pipelined", "transition")
-# sub-phase + out-of-loop span names
+# sub-phase + out-of-loop span names; the last row are the fault/defense
+# events of repro.faults (integrity digests, divergence checks, rollback,
+# fetch retries, memory-pressure backoff)
 SPAN_KINDS = STEP_KINDS + ("replan", "h2d_prefetch", "l0_stage",
-                           "writeback", "eval")
+                           "writeback", "eval",
+                           "integrity", "divergence_check", "rollback",
+                           "fetch_retry", "mem_backoff")
 
 
 def device_peak_bytes() -> int | None:
@@ -84,6 +88,21 @@ class StepCounters:
     hot_hits: int | None = None
     host_hits: int | None = None
     fresh_recomputes: int | None = None
+    # fault/defense event deltas (repro.faults); None on clean runs so
+    # the exporter emits no flat-zero tracks and totals stay unchanged.
+    # Per step, each defense field counts actions taken THIS step and
+    # faults_injected counts injector firings — the two streams sum to
+    # equal totals per fault class (asserted by the fault suite).
+    faults_injected: int | None = None
+    fetch_errors: int | None = None
+    fetch_retries: int | None = None
+    fetch_stale_reuse: int | None = None
+    slow_fetches: int | None = None
+    prefetch_degraded_steps: int | None = None
+    corruptions_detected: int | None = None
+    forced_refreshes: int | None = None
+    rollbacks: int | None = None
+    mem_backoffs: int | None = None
     t: float = 0.0                  # perf_counter stamp (set by count())
 
 
@@ -202,11 +221,16 @@ class Tracer:
         totals exactly (``comm_bytes``, ``host_fetch_rows``, …)."""
         keys = ("wire_bytes", "wire_bytes_vanilla", "host_fetch_rows",
                 "host_fetch_bytes", "host_writeback_rows",
-                "host_writeback_bytes")
+                "host_writeback_bytes",
+                # fault/defense streams (None on clean runs -> summed as 0)
+                "faults_injected", "fetch_errors", "fetch_retries",
+                "fetch_stale_reuse", "slow_fetches",
+                "prefetch_degraded_steps", "corruptions_detected",
+                "forced_refreshes", "rollbacks", "mem_backoffs")
         tot = {k: 0 for k in keys}
         for c in self.counters:
             for k in keys:
-                tot[k] += getattr(c, k)
+                tot[k] += getattr(c, k) or 0
         tot["steps"] = len(self.counters)
         return tot
 

@@ -222,7 +222,7 @@ class GNNServeEngine:
         self.stale = np.zeros(n, dtype=bool)
         self.stats = {"queries": 0, "hot_hits": 0, "host_hits": 0,
                       "fresh_recomputes": 0, "batches": 0,
-                      "host_fetch_s": 0.0}
+                      "rejected_queries": 0, "host_fetch_s": 0.0}
         self.tracer = NULL_TRACER
 
     def set_tracer(self, tracer) -> None:
@@ -232,6 +232,33 @@ class GNNServeEngine:
         caller's per-batch span."""
         self.tracer = tracer
         self.host_store.set_tracer(tracer)
+
+    # -- input validation ----------------------------------------------------
+
+    def _validate_ids(self, nodes) -> np.ndarray:
+        """Reject malformed query batches before they reach the tiers: a
+        negative or out-of-range id would fancy-index garbage (or wrap
+        around) instead of failing.  Rejected ids are counted in
+        ``stats["rejected_queries"]`` and surfaced as a clean
+        ``ValueError`` naming the offenders."""
+        nodes = np.asarray(nodes)
+        if nodes.ndim != 1:
+            raise ValueError(f"query batch must be 1-D node ids, "
+                             f"got shape {nodes.shape}")
+        if not np.issubdtype(nodes.dtype, np.integer):
+            raise ValueError(f"query batch must be integer node ids, "
+                             f"got dtype {nodes.dtype}")
+        nodes = nodes.astype(np.int64, copy=False)
+        n = self.graph.num_nodes
+        bad = (nodes < 0) | (nodes >= n)
+        if bad.any():
+            k = int(bad.sum())
+            self.stats["rejected_queries"] += k
+            sample = nodes[bad][:5].tolist()
+            raise ValueError(
+                f"query contains {k} out-of-range node id(s) "
+                f"(valid range [0, {n})): {sample}")
+        return nodes
 
     # -- freshness ---------------------------------------------------------
 
@@ -288,7 +315,7 @@ class GNNServeEngine:
         """Pure tiered fetch (no staleness check): hot tier via the Pallas
         gather kernel, host-store staged fetch for the rest (timed
         separately into ``host_fetch_s``)."""
-        nodes = np.asarray(nodes, np.int64)
+        nodes = self._validate_ids(nodes)
         out = np.empty((nodes.size, self.cfg.out_dim), np.float32)
         slots = self.hot_slot[nodes]
         hit = slots >= 0
@@ -311,7 +338,7 @@ class GNNServeEngine:
     def query(self, nodes: np.ndarray) -> np.ndarray:
         """Serve one micro-batch: cached tiers for clean nodes, k-hop
         fresh recompute for stale ones."""
-        nodes = np.asarray(nodes, np.int64)
+        nodes = self._validate_ids(nodes)
         st = self.stale[nodes]
         if not st.any():
             return self.lookup(nodes)

@@ -1,0 +1,372 @@
+"""repro.faults: seeded fault injection + graceful degradation.
+
+The two contracts under test (ISSUE acceptance):
+
+- **zero overhead disabled** — with no ``FaultPlan``/guard attached (or a
+  disabled one), training is bit-identical to a run that never heard of
+  ``repro.faults``; a defense-armed but fault-free run is also
+  bit-identical (the guards change control flow only on failure).
+- **injected == defended, exactly** — under each fault class at a fixed
+  seed, training completes with a finite loss and every injector firing
+  is matched by exactly one counted defense event (fetch_drop ->
+  fetch_errors, fetch_delay -> slow_fetches, halo_corrupt ->
+  corruptions_detected, grad_nan -> rollbacks, mem_pressure ->
+  mem_backoffs).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (PROFILES, AdaptivePlanner, CacheCapacity,
+                        StalenessController, build_cache_plan, cal_capacity)
+from repro.data.gnn_data import FullBatchTask, split_masks
+from repro.dist import (build_exchange_plan, make_sim_runtime,
+                        stack_partitions, train_capgnn)
+from repro.faults import (FAULT_KINDS, DefenseEvents, FaultPlan, FetchError,
+                          FetchGuard, GuardConfig, NULL_FAULTS)
+from repro.graph import (build_partition, metis_partition, rmat,
+                         symmetric_normalize, synth_features)
+from repro.models.gnn import GNNConfig
+from repro.optim import adam
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+PARTS = 2
+EPOCHS = 8
+REFRESH_EVERY = 2
+
+
+def _base(policy=None):
+    g = rmat(260, 1500, seed=5)
+    feats, labels = synth_features(g, 12, 4, seed=5)
+    gn = symmetric_normalize(g)
+    tr, va, te = split_masks(g.num_nodes, seed=5)
+    task = FullBatchTask(graph=gn, features=feats, labels=labels,
+                         train_mask=tr, val_mask=va, test_mask=te,
+                         num_classes=4)
+    ps = build_partition(gn, metis_partition(gn, PARTS, seed=5), hops=1)
+    cfg = GNNConfig(model="gcn", in_dim=12, hidden_dim=16, out_dim=4,
+                    num_layers=2)
+    cap = cal_capacity(ps, cfg.feat_dims, [PROFILES["rtx3090"]] * PARTS,
+                       m_cpu_gib=1.0)
+    planner = None
+    if policy:
+        planner = AdaptivePlanner(ps, cap, refresh_every=REFRESH_EVERY,
+                                  policy=policy, seed=5)
+        xplan = planner.exchange_plan()
+    else:
+        plan = build_cache_plan(ps, cap, refresh_every=REFRESH_EVERY)
+        xplan = build_exchange_plan(ps, plan)
+    sp = stack_partitions(ps, task)
+    return task, ps, cfg, sp, xplan, planner
+
+
+def _train(features="host", spec=None, guard=None, policy=None,
+           tracer=None, faults=None):
+    task, ps, cfg, sp, xplan, planner = _base(policy)
+    opt = adam(0.01)
+    rt = make_sim_runtime(cfg, sp, xplan, opt, features=features)
+    ctl = StalenessController(refresh_every=REFRESH_EVERY)
+    if spec:
+        faults = FaultPlan.parse(spec, seed=0)
+    return train_capgnn(cfg, rt, xplan, PARTS, opt, epochs=EPOCHS,
+                        controller=ctl, seed=0, planner=planner,
+                        faults=faults, guard=guard, tracer=tracer)
+
+
+# ------------------------------------------------------------ plan parsing
+
+def test_parse_roundtrip_and_errors():
+    fp = FaultPlan.parse("fetch_drop@3,7;grad_nan@5;halo_corrupt@4:rows=8",
+                         seed=3)
+    assert fp.enabled and fp.seed == 3
+    assert fp.spec_string() == "fetch_drop@3,7;grad_nan@5;halo_corrupt@4"
+    assert fp._by_kind["halo_corrupt"].rows == 8
+    assert fp._by_kind["fetch_drop"].steps == (3, 7)
+    # reparsing the roundtripped string yields the same step addressing
+    fp2 = FaultPlan.parse(fp.spec_string(), seed=3)
+    assert {k: s.steps for k, s in fp2._by_kind.items()} \
+        == {k: s.steps for k, s in fp._by_kind.items()}
+
+    assert not FaultPlan.parse("").enabled
+    assert not FaultPlan.parse(None).enabled
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("cosmic_ray@3")
+    with pytest.raises(ValueError, match="kind@step"):
+        FaultPlan.parse("grad_nan")
+    with pytest.raises(ValueError, match="unknown fault option"):
+        FaultPlan.parse("grad_nan@3:zap=1")
+    with pytest.raises(ValueError, match="duplicate"):
+        FaultPlan.parse("grad_nan@3;grad_nan@5")
+    assert set(FAULT_KINDS) >= {"fetch_drop", "grad_nan", "ckpt_truncate"}
+
+
+def test_injectors_noop_outside_step_window():
+    """Setup/eval are never faulted: injectors only fire between
+    begin_step and end_run, and only on marked steps."""
+    fp = FaultPlan.parse("fetch_drop@2;grad_nan@2;mem_pressure@2")
+    fp.on_fetch()                       # no begin_step -> no-op
+    assert fp.corrupt_params({"w": None}) == {"w": None}
+    assert not fp.mem_pressure()
+    fp.begin_step(1)                    # unmarked step -> no-op
+    fp.on_fetch()
+    assert not fp.mem_pressure()
+    fp.begin_step(2)
+    with pytest.raises(FetchError):
+        fp.on_fetch()
+    assert fp.mem_pressure()
+    fp.end_run()
+    fp.on_fetch()                       # window closed again
+    assert fp.injected["fetch_drop"] == 1
+    assert fp.injected["mem_pressure"] == 1
+    assert NULL_FAULTS.total_injected() == 0
+
+
+# -------------------------------------------------- disabled == untouched
+
+def test_clean_run_bit_identical_with_disabled_plan():
+    """faults=None, faults=disabled-plan, and a defense-armed fault-free
+    run all produce bit-identical losses (zero-overhead contract; the
+    guards alter numerics only when something actually fails)."""
+    _, plain = _train(features="host")
+    _, nullfp = _train(features="host", faults=FaultPlan(()))
+    assert plain.losses == nullfp.losses
+    assert plain.fault_events is None and plain.faults_injected is None
+    assert nullfp.fault_events is None and nullfp.faults_injected is None
+
+    _, guarded = _train(features="host",
+                        guard=GuardConfig(guard_every=2, fetch_retries=2,
+                                          checksums=True,
+                                          fetch_timeout_s=10.0))
+    assert guarded.losses == plain.losses
+    assert all(v == 0 for v in guarded.fault_events.values())
+
+
+# ------------------------------------------------------ injected==defended
+
+@pytest.mark.parametrize("spec,defense,guard_kw,policy", [
+    ("fetch_drop@3,5", "fetch_errors", dict(fetch_retries=2), None),
+    ("fetch_delay@2:delay_s=0.12", "slow_fetches",
+     dict(fetch_timeout_s=0.05), None),
+    ("halo_corrupt@3", "corruptions_detected", dict(checksums=True), None),
+    ("grad_nan@3", "rollbacks", dict(guard_every=2), None),
+    ("mem_pressure@4", "mem_backoffs", dict(), "lru"),
+])
+def test_fault_class_defended_exactly(spec, defense, guard_kw, policy):
+    kind = spec.split("@")[0]
+    _, rep = _train(features="host", spec=spec,
+                    guard=GuardConfig(**guard_kw), policy=policy)
+    assert len(rep.losses) == EPOCHS and np.isfinite(rep.losses[-1])
+    assert rep.faults_injected[kind] > 0
+    assert rep.faults_injected[kind] == rep.fault_events[defense], \
+        (rep.faults_injected, rep.fault_events)
+
+
+def test_rollback_resumes_clean_trajectory():
+    """After the NaN step's rollback + forced refresh, training replays
+    the clean loss trajectory exactly (the snapshot restore is
+    bit-faithful and the plain refresh rewrites every poisoned tier)."""
+    _, clean = _train(features="host")
+    _, rep = _train(features="host", spec="grad_nan@3",
+                    guard=GuardConfig(guard_every=2))
+    assert not np.isfinite(rep.losses[3])            # the injected step
+    # snapshot was taken after step 1; the rollback replays from there
+    np.testing.assert_allclose(rep.losses[4:], clean.losses[2:EPOCHS - 2],
+                               rtol=1e-6, atol=1e-7)
+    assert rep.fault_events["rollbacks"] == 1
+    assert rep.fault_events["forced_refreshes"] == 1
+
+
+def test_injection_deterministic_across_runs():
+    """Same spec + seed -> the same per-step events and the same final
+    loss, bit for bit (what lets the suite assert exact accounting)."""
+    _, a = _train(features="host", spec="fetch_drop@3;halo_corrupt@4",
+                  guard=GuardConfig(fetch_retries=1, checksums=True))
+    _, b = _train(features="host", spec="fetch_drop@3;halo_corrupt@4",
+                  guard=GuardConfig(fetch_retries=1, checksums=True))
+    assert a.losses == b.losses
+    assert a.faults_injected == b.faults_injected
+    assert a.fault_events == b.fault_events
+
+
+def test_tracer_counters_sum_to_report_ledgers():
+    from repro.obs import Tracer
+    tr = Tracer()
+    _, rep = _train(features="host", spec="fetch_drop@3;grad_nan@5",
+                    guard=GuardConfig(guard_every=2, fetch_retries=1),
+                    tracer=tr)
+    tot = tr.totals()
+    for k, v in rep.fault_events.items():
+        assert tot[k] == v, (k, tot[k], v)
+    assert tot["faults_injected"] == sum(rep.faults_injected.values())
+    kinds = {s.kind for s in tr.spans}
+    assert {"rollback", "divergence_check"} <= kinds
+
+
+# --------------------------------------------------------- guard unit tests
+
+def test_fetch_guard_stale_reuse_and_exhaustion():
+    ev = DefenseEvents()
+    g = FetchGuard(GuardConfig(fetch_retries=2, fetch_backoff_s=0.0), ev)
+
+    class _Store:
+        from repro.obs.tracer import NULL_TRACER as tracer
+
+    def always_fails():
+        raise FetchError("down")
+
+    # no previously consumed rows -> clean terminal error
+    with pytest.raises(FetchError, match="no previously consumed rows"):
+        g.fetch_sync(always_fails, _Store, "l0")
+    assert ev.fetch_errors == 3 and ev.fetch_retries == 2
+    # once rows were consumed, exhaustion degrades to stale reuse
+    g.last_good["l0"] = np.ones(3)
+    out = g.fetch_sync(always_fails, _Store, "l0")
+    np.testing.assert_array_equal(out, np.ones(3))
+    assert ev.fetch_stale_reuse == 1
+    assert ev.fetch_errors == 6
+
+
+def test_prefetch_degradation_window():
+    ev = DefenseEvents()
+    g = FetchGuard(GuardConfig(degrade_steps=2), ev)
+    assert g.prefetch_ok()
+    g._degraded = 2
+    assert not g.prefetch_ok() and not g.prefetch_ok()
+    assert g.prefetch_ok()                 # window over
+    assert ev.prefetch_degraded_steps == 2
+
+
+# --------------------------------------------------- planner memory backoff
+
+def _xshapes(xp):
+    """The exchange plan's slot-stable shape signature."""
+    return tuple(a.shape for a in (
+        xp.uncached.send_row, xp.uncached.recv_valid,
+        xp.uncached.peer_send_row, xp.local.send_row, xp.local.recv_valid,
+        xp.local.peer_send_row, xp.glob.send_row, xp.glob.src_part,
+        xp.glob.read_pos))
+
+
+def _pressure_planner(policy):
+    g = rmat(260, 1500, seed=5)
+    ps = build_partition(symmetric_normalize(g),
+                         metis_partition(g, PARTS, seed=5), hops=1)
+    # small enough that every budget binds (shrinking must change plans)
+    cap = CacheCapacity(c_gpu=[max(2, pt.n_halo // 2) for pt in ps.parts],
+                        c_cpu=max(2, ps.halo_union().size // 2))
+    return ps, AdaptivePlanner(ps, cap, refresh_every=REFRESH_EVERY,
+                               policy=policy, seed=5)
+
+
+def test_shrink_capacity_is_slot_stable():
+    """Shrinking under memory pressure halves the budgets but pins the
+    exchange padding at the pre-shrink capacity, so post-shrink plans
+    keep the original shape signature (no retrace on swap)."""
+    ps, planner = _pressure_planner("lru")
+    shapes = _xshapes(planner.exchange_plan())
+    cap_before = planner.capacity
+    planner.shrink_capacity(0.5)
+    assert planner.capacity.c_cpu == int(cap_before.c_cpu * 0.5)
+    assert planner.capacity.c_gpu == [int(c * 0.5)
+                                      for c in cap_before.c_gpu]
+    new_plan = planner.replan()
+    assert _xshapes(planner.exchange_plan(new_plan)) == shapes
+    # the shrunk budgets actually bound the new plan's residency
+    for i, w in enumerate(new_plan.workers):
+        assert w.local_gids.size <= planner.capacity.c_gpu[i]
+    with pytest.raises(ValueError, match="shrink factor"):
+        planner.shrink_capacity(0.0)
+
+
+def test_shrink_capacity_static_rebuilds_plan():
+    """static replan() returns the installed plan unchanged, so the
+    shrink itself must rebuild it under the smaller budget."""
+    ps, planner = _pressure_planner("static")
+    shapes = _xshapes(planner.exchange_plan())
+    rows_before = sum(w.local_gids.size for w in planner.plan.workers)
+    planner.shrink_capacity(0.5)
+    rows_after = sum(w.local_gids.size for w in planner.plan.workers)
+    assert rows_after < rows_before
+    assert planner.replan() is planner.plan
+    assert _xshapes(planner.exchange_plan()) == shapes
+
+
+# ------------------------------------------------------ checkpoint integrity
+
+def test_checkpoint_truncation_detected_and_skipped(tmp_path):
+    import warnings
+
+    from repro.checkpoint import (CheckpointCorruptError, latest_step,
+                                  load_checkpoint, save_checkpoint,
+                                  verify_checkpoint)
+
+    d = str(tmp_path)
+    tree = {"w": np.arange(20, dtype=np.float32).reshape(4, 5)}
+    save_checkpoint(d, 2, tree)
+    save_checkpoint(d, 4, tree)
+    assert latest_step(d) == 4
+    meta = verify_checkpoint(d, 4)
+    assert meta["payload_crc32"] is not None and meta["payload_bytes"] > 0
+
+    FaultPlan.parse("ckpt_truncate@0:frac=0.3").truncate_checkpoint(
+        os.path.join(d, "ckpt_00000004.npz"))
+    with pytest.raises(CheckpointCorruptError, match="truncated"):
+        verify_checkpoint(d, 4)
+    with pytest.raises(CheckpointCorruptError):
+        load_checkpoint(d, 4, tree)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert latest_step(d) == 2
+    assert any("corrupt" in str(x.message) for x in w)
+    got = load_checkpoint(d, 2, tree)
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+
+def test_checkpoint_bitflip_detected(tmp_path):
+    from repro.checkpoint import CheckpointCorruptError, verify_checkpoint
+    from repro.checkpoint import save_checkpoint
+
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"w": np.zeros(8, np.float32)})
+    path = os.path.join(d, "ckpt_00000001.npz")
+    raw = bytearray(open(path, "rb").read())
+    raw[-1] ^= 0xFF                      # same length, different bytes
+    open(path, "wb").write(bytes(raw))
+    with pytest.raises(CheckpointCorruptError, match="checksum mismatch"):
+        verify_checkpoint(d, 1)
+
+
+def test_checkpoint_pre_checksum_meta_still_loads(tmp_path):
+    import json
+
+    from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+
+    d = str(tmp_path)
+    tree = {"w": np.ones(6, np.float32)}
+    save_checkpoint(d, 3, tree)
+    mp = os.path.join(d, "ckpt_00000003.json")
+    meta = json.load(open(mp))
+    del meta["payload_crc32"], meta["payload_bytes"]
+    json.dump(meta, open(mp, "w"))
+    assert latest_step(d) == 3
+    got = load_checkpoint(d, 3, tree)
+    np.testing.assert_array_equal(got["w"], tree["w"])
+
+
+# ------------------------------------------------- regression gate key diff
+
+def test_check_regression_reports_keys_both_directions():
+    from benchmarks.check_regression import compare, new_keys
+
+    baseline = {"s": {"a": 1, "b": True}}
+    current = {"s": {"a": 1, "c": 2.0}, "t": {"x": 1}}
+    problems = compare(baseline, current, 1e-3, 25.0)
+    assert any("s.b" in p and "missing" in p for p in problems)
+    extra = new_keys(baseline, current)
+    assert any(e.startswith("s.c") for e in extra)
+    assert any(e.startswith("t:") for e in extra)
+    # SKIP_KEYS never reported in either direction
+    assert not new_keys({"s": {}}, {"s": {"_mtime": "now"}})

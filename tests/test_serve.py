@@ -262,3 +262,31 @@ def test_zipf_skew_monotone_in_alpha(case):
     assert np.all(hi.node <= lo.node)            # pointwise, same uniforms
     m = max(1, n // 20)
     assert np.mean(hi.node < m) >= np.mean(lo.node < m)
+
+
+def test_engine_rejects_out_of_range_ids():
+    """Malformed query batches fail with a clean ValueError (not a numpy
+    fancy-index surprise) and are counted in ``rejected_queries``; valid
+    queries afterwards are unaffected."""
+    task, ps, cfg, params, _ = _base()
+    store, ref = _bundle("edges")
+    g = task.graph
+    hot = rank_hot_nodes(g, 40, ps=ps, policy="degree")
+    engine = GNNServeEngine(store, params, g, hot, features=task.features)
+
+    with pytest.raises(ValueError, match="out-of-range"):
+        engine.lookup(np.array([0, -1, 3]))
+    with pytest.raises(ValueError, match="out-of-range"):
+        engine.query(np.array([g.num_nodes, 2, g.num_nodes + 7]))
+    assert engine.stats["rejected_queries"] == 3
+    with pytest.raises(ValueError, match="1-D"):
+        engine.lookup(np.zeros((2, 2), np.int64))
+    with pytest.raises(ValueError, match="integer"):
+        engine.lookup(np.array([0.5, 1.0]))
+    # nothing was served by the rejected batches
+    assert engine.stats["queries"] == 0
+
+    q = np.arange(0, g.num_nodes, 7)
+    out = engine.lookup(q)
+    np.testing.assert_allclose(out, ref[q], rtol=1e-5, atol=1e-5)
+    assert engine.stats["queries"] == q.size

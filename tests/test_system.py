@@ -242,3 +242,50 @@ def test_train_resume_roundtrip(tmp_path):
                                           "resume": True}))
     assert third["resumed_from"] == 8 and third["final_loss"] is None
     assert latest_step(d) == 8
+
+
+def test_kill_and_resume_parity(tmp_path):
+    """Simulated mid-run crash: a later checkpoint left truncated mid-write
+    (plus a stray .tmp from the interrupted save) must not derail
+    ``--resume`` — ``latest_step`` skips the damaged entry, resumes from
+    the newest *valid* checkpoint, and the completed run matches the
+    uninterrupted one exactly."""
+    import argparse
+    import shutil
+    import warnings
+    from repro.checkpoint import latest_step
+    from repro.faults import FaultPlan
+    from repro.launch.train import run_gnn
+
+    base = dict(dataset="flickr", scale=0.008, feat_dim=16, model="gcn",
+                backend="edges", hidden=16, layers=2, parts=2,
+                partitioner="metis", epochs=8, lr=0.01, jaca=True,
+                rapa=False, pipeline=False, refresh_every=4,
+                adaptive_staleness=False, cpu_cache_gib=1.0, seed=0,
+                ckpt_dir="", resume=False)
+    straight = run_gnn(argparse.Namespace(**base))
+
+    d = str(tmp_path / "ck")
+    run_gnn(argparse.Namespace(**{**base, "epochs": 4, "ckpt_dir": d}))
+    assert latest_step(d) == 4
+
+    # fake the crash: a step-6 checkpoint whose payload write was cut
+    # short (valid sidecar meta, truncated npz) plus the stray tmp file
+    # an interrupted atomic save leaves behind
+    shutil.copy(f"{d}/ckpt_00000004.npz", f"{d}/ckpt_00000006.npz")
+    shutil.copy(f"{d}/ckpt_00000004.json", f"{d}/ckpt_00000006.json")
+    FaultPlan.parse("ckpt_truncate@0:frac=0.5").truncate_checkpoint(
+        f"{d}/ckpt_00000006.npz")
+    open(f"{d}/ckpt_00000006.npz.tmp", "wb").write(b"partial")
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        assert latest_step(d) == 4          # corrupt 6 skipped
+        resumed = run_gnn(argparse.Namespace(**{**base, "ckpt_dir": d,
+                                                "resume": True}))
+    assert resumed["resumed_from"] == 4
+    np.testing.assert_allclose(resumed["final_loss"],
+                               straight["final_loss"],
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(resumed["test_acc"], straight["test_acc"],
+                               rtol=1e-6, atol=1e-7)
