@@ -53,7 +53,7 @@ GATED_SUITES = ["kernels_bench", "comm_volume", "serve_bench",
 TIMING_SUFFIXES = ("_ms", "_s", "_seconds")
 TIMING_MARKERS = ("time", "qps", "tok", "wall", "p50", "p99", "speedup",
                   "overhead", "benefit", "_leq_")
-SKIP_KEYS = ("_mtime", "_wall_s", "trace_file")
+SKIP_KEYS = ("_mtime", "_wall_s", "_prov", "trace_file")
 
 
 def is_timing(key: str) -> bool:

@@ -79,7 +79,7 @@ def _build(tiny: bool, features: str = "host", policy: str | None = None,
     from repro.core import (PROFILES, AdaptivePlanner, StalenessController,
                             build_cache_plan, cal_capacity)
     from repro.data import make_task
-    from repro.dist import (build_exchange_plan, make_sim_runtime,
+    from repro.dist import (TrainSpec, build_exchange_plan, make_sim_runtime,
                             stack_partitions)
     from repro.graph import build_partition, metis_partition
     from repro.models.gnn import GNNConfig
@@ -103,7 +103,9 @@ def _build(tiny: bool, features: str = "host", policy: str | None = None,
         xplan = build_exchange_plan(ps, plan)
     sp = stack_partitions(ps, task)
     opt = adam(0.01)
-    rt = make_sim_runtime(cfg, sp, xplan, opt, features=features)
+    spec = TrainSpec(features=features, refresh_every=REFRESH_EVERY,
+                     cache_policy=policy or "static")
+    rt = make_sim_runtime(cfg, sp, xplan, opt, spec=spec)
     ctl = StalenessController(refresh_every=REFRESH_EVERY)
     return cfg, rt, xplan, parts, opt, planner, ctl
 
@@ -117,7 +119,7 @@ def _train(tiny: bool, spec: str | None = None, guard_kw: dict | None = None,
     faults = FaultPlan.parse(spec, seed=0) if spec else None
     guard = GuardConfig(**guard_kw) if guard_kw is not None else None
     _, rep = train_capgnn(cfg, rt, xplan, parts, opt, epochs=EPOCHS,
-                          controller=ctl, seed=0, planner=planner,
+                          controller=ctl, spec=rt.spec, planner=planner,
                           tracer=tracer, faults=faults, guard=guard)
     return rep
 
@@ -199,7 +201,7 @@ def checkpoint_section(tiny: bool) -> dict:
     cfg, rt, xplan, parts, opt, planner, ctl = _build(tiny)
     half = EPOCHS // 2
     params, rep = train_capgnn(cfg, rt, xplan, parts, opt, epochs=half,
-                               controller=ctl, seed=0)
+                               controller=ctl, spec=rt.spec)
     mid = {"params": params, "opt_state": rep.final_opt_state}
     mid_host = jax.tree.map(np.asarray, mid)
     out: dict = {}
@@ -207,7 +209,7 @@ def checkpoint_section(tiny: bool) -> dict:
         save_checkpoint(d, half, mid)
         params, rep = train_capgnn(cfg, rt, xplan, parts, opt,
                                    epochs=EPOCHS - half, controller=ctl,
-                                   seed=0, params0=params,
+                                   spec=rt.spec, params0=params,
                                    opt_state0=rep.final_opt_state)
         save_checkpoint(d, EPOCHS,
                         {"params": params,
@@ -248,7 +250,7 @@ def spmd_sweep(tiny: bool, transports=("allgather", "p2p")) -> dict:
     from repro.core import (PROFILES, StalenessController, build_cache_plan,
                             cal_capacity)
     from repro.data import make_task
-    from repro.dist import (build_exchange_plan, stack_partitions,
+    from repro.dist import (TrainSpec, build_exchange_plan, stack_partitions,
                             train_capgnn)
     from repro.dist.capgnn_spmd import make_spmd_runtime
     from repro.faults import FaultPlan, GuardConfig
@@ -272,12 +274,13 @@ def spmd_sweep(tiny: bool, transports=("allgather", "p2p")) -> dict:
     mesh = jax.make_mesh((parts,), ("data",))
 
     def run(transport, spec=None, guard=None):
-        rt = make_spmd_runtime(cfg, sp, xplan, opt, mesh,
-                               transport=transport, features="host")
+        tspec = TrainSpec(transport=transport, features="host",
+                          refresh_every=REFRESH_EVERY)
+        rt = make_spmd_runtime(cfg, sp, xplan, opt, mesh, spec=tspec)
         ctl = StalenessController(refresh_every=REFRESH_EVERY)
         faults = FaultPlan.parse(spec, seed=0) if spec else None
         _, rep = train_capgnn(cfg, rt, xplan, parts, opt, epochs=EPOCHS,
-                              controller=ctl, seed=0, faults=faults,
+                              controller=ctl, spec=tspec, faults=faults,
                               guard=guard)
         return rep
 

@@ -21,7 +21,7 @@ import numpy as np
 from repro.core import (CacheCapacity, PAPER_GROUPS, RapaConfig,
                         StalenessController, build_cache_plan, cal_capacity,
                         do_partition, make_group)
-from repro.dist import (build_exchange_plan, make_sim_runtime,
+from repro.dist import (TrainSpec, build_exchange_plan, make_sim_runtime,
                         stack_partitions, train_capgnn)
 from repro.graph import build_partition, metis_partition
 from repro.models.gnn import GNNConfig
@@ -62,11 +62,12 @@ def _variant(task, ps_base, profiles, model, jaca: bool, rapa: bool,
     xplan = build_exchange_plan(ps, plan)
     sp = stack_partitions(ps, task, backend=backend)
     opt = adam(0.01)
-    runtime = make_sim_runtime(cfg, sp, xplan, opt, backend=backend)
+    spec = TrainSpec(backend=backend, refresh_every=refresh, pipeline=pipe)
+    runtime = make_sim_runtime(cfg, sp, xplan, opt, spec=spec)
     ctl = StalenessController(refresh_every=refresh)
     params, rep = train_capgnn(cfg, runtime, xplan, ps.num_parts, opt,
                                epochs=EPOCHS, controller=ctl,
-                               eval_every=0, pipeline=pipe, tracer=tracer)
+                               eval_every=0, spec=spec, tracer=tracer)
     _, acc = runtime.evaluate(params, "test")
     return {
         # steady-state epoch time: wall_time_s excludes the fenced

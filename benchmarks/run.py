@@ -111,7 +111,22 @@ def write_summary(out_dir: str | None = None,
             fields["_wall_s"] = old["_wall_s"]
     for name, wall in (walls or {}).items():
         summary.setdefault(name, {})["_wall_s"] = round(wall, 2)
-    summary["_provenance"] = provenance()
+    # per-suite provenance: suites executed this invocation are stamped
+    # with the current environment; entries folded from stale JSONs carry
+    # their stamp forward from the previous summary.  When no previous
+    # summary exists (fresh checkout + --only single-suite), every entry
+    # still gets the current stamp instead of silently losing provenance.
+    prov = provenance()
+    for name, fields in summary.items():
+        if not isinstance(fields, dict):
+            continue
+        old = prev.get(name)
+        if (name in (walls or {}) or not isinstance(old, dict)
+                or "_prov" not in old):
+            fields["_prov"] = prov
+        else:
+            fields["_prov"] = old["_prov"]
+    summary["_provenance"] = prov
     with open(path, "w") as f:
         json.dump(summary, f, indent=1, sort_keys=True)
     return path

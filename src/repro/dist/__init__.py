@@ -1,5 +1,13 @@
 """CaPGNN partition-parallel runtime (paper §4-§5).
 
+- :mod:`repro.dist.spec` — :class:`TrainSpec`, the validated,
+  serialisable configuration surface every runtime builds through.
+- :mod:`repro.dist.strategy` — the pluggable :class:`DistStrategy`
+  interface (layout construction, per-layer collective steps, byte
+  accounting) with the ``halo_1d`` implementation and registry.
+- :mod:`repro.dist.strategy_15d` — the ``spmm_15d`` strategy:
+  communication-avoiding 1.5D replicated-row block SpMM on a
+  ``(grp, sub, repl)`` mesh.
 - :mod:`repro.dist.exchange` — compile a JACA cache plan into static
   gather/scatter index sets; stack partitions into the padded ``[P, ...]``
   layout.
@@ -11,6 +19,11 @@
   with double-buffered host→device staged fetch, behind both runtimes'
   ``features="host"`` mode and the serve engine's host tier.
 """
+from .spec import (BACKENDS, CACHE_POLICIES, FEATURES, HALO_DTYPES,
+                   TRANSPORTS, TrainSpec)
+from .strategy import (STRATEGY_NAMES, DistStrategy, Halo1DStrategy,
+                       HaloLayout, StrategyCapabilityError, StrategyCaps,
+                       get_strategy)
 from .exchange import (ExchangeCapacity, ExchangePlan, ExchangeTier,
                        GlobalTier, HostTier, StackedEllPack, StackedParts,
                        build_exchange_plan, exchange_capacity,
@@ -21,8 +34,18 @@ from .capgnn_sim import (RUNTIME_FEATURES, SimRuntime, TrainReport,
                          exchange_arrays, init_caches, make_sim_runtime,
                          train_capgnn)
 from .capgnn_spmd import SpmdRuntime, make_spmd_runtime, spmd_exchange_arrays
+from .strategy_15d import (Spmm15dLayout, Spmm15DStrategy, Spmm15dRuntime,
+                           build_spmm15d_layout, make_spmm15d_mesh,
+                           make_spmm15d_runtime, train_spmm15d)
 
 __all__ = [
+    "BACKENDS", "CACHE_POLICIES", "FEATURES", "HALO_DTYPES", "TRANSPORTS",
+    "TrainSpec",
+    "STRATEGY_NAMES", "DistStrategy", "Halo1DStrategy", "HaloLayout",
+    "StrategyCapabilityError", "StrategyCaps", "get_strategy",
+    "Spmm15dLayout", "Spmm15DStrategy", "Spmm15dRuntime",
+    "build_spmm15d_layout", "make_spmm15d_mesh", "make_spmm15d_runtime",
+    "train_spmm15d",
     "ExchangeCapacity", "ExchangePlan", "ExchangeTier", "GlobalTier",
     "HostTier", "StackedEllPack", "StackedParts", "build_exchange_plan",
     "exchange_capacity", "stack_partitions",

@@ -53,6 +53,7 @@ from .exchange import ExchangePlan, ExchangeTier, GlobalTier, StackedParts
 # halo_dtype_info moved to host_store (the staged h2d path casts with the
 # same rules as the wire); re-exported here for backward compatibility
 from .host_store import HostFeatureStore, halo_dtype_info
+from .spec import TrainSpec, halo_dtype_name, warn_loose_kwargs
 
 __all__ = ["make_sim_runtime", "SimRuntime", "init_caches", "train_capgnn",
            "TrainReport", "RUNTIME_BACKENDS", "check_backend",
@@ -281,6 +282,9 @@ class SimRuntime:
     # the stacked layout this runtime was built over — kept for padded-row
     # accounting under uneven (resource-aware) partitions
     stacked: StackedParts | None = dataclasses.field(default=None, repr=False)
+    # the TrainSpec this runtime was configured from (always set — the
+    # loose-kwarg shim synthesises one), recorded into TrainReport.spec
+    spec: TrainSpec | None = dataclasses.field(default=None, repr=False)
 
     def padding_stats(self) -> dict:
         """Valid vs padded stacked-row counts (see
@@ -366,8 +370,16 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                      halo_dtype=None, donate: bool = True,
                      features: str = "device",
                      host_store: HostFeatureStore | None = None,
-                     prefetch_depth: int = 2) -> SimRuntime:
+                     prefetch_depth: int = 2,
+                     spec: TrainSpec | None = None) -> SimRuntime:
     """Build the jitted stacked-oracle runtime.
+
+    ``spec`` (a :class:`repro.dist.TrainSpec`) is the configuration
+    surface; when passed it overrides every loose configuration kwarg
+    below.  The loose kwargs remain as a deprecated shim that forwards
+    into a synthesised spec (one ``DeprecationWarning`` per call — see
+    the README migration note).  ``host_store`` stays a real argument
+    either way: it is a resource, not a choice.
 
     ``exchange_layer0=False`` models pre-replicated input features (they are
     static, so a deployment ships them once): layer 0 drops out of the byte
@@ -403,6 +415,23 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
     ``host_store`` injects a pre-built store (shared with a serve engine);
     by default one is built over ``sp.halo_feats``.
     """
+    if spec is None:
+        warn_loose_kwargs("make_sim_runtime")
+        spec = TrainSpec(strategy="halo_1d", backend=backend,
+                         features=features,
+                         halo_dtype=halo_dtype_name(halo_dtype),
+                         exchange_layer0=exchange_layer0, donate=donate,
+                         interpret=interpret,
+                         prefetch_depth=prefetch_depth)
+    # the spec is authoritative from here on — identical construction for
+    # both entry paths (the shim-equivalence tests pin this)
+    exchange_layer0 = spec.exchange_layer0
+    backend = spec.backend
+    interpret = spec.interpret
+    halo_dtype = spec.halo_dtype
+    donate = spec.donate
+    features = spec.features
+    prefetch_depth = spec.prefetch_depth
     p, ni, nh = sp.num_parts, sp.n_inner_max, sp.n_halo_max
     hdt, hd_bytes = halo_dtype_info(halo_dtype)
     layers = cfg.num_layers
@@ -806,7 +835,8 @@ def make_sim_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                       caches0=caches0, backend=backend,
                       halo_dtype_bytes=hd_bytes,
                       features=features, host_store=store,
-                      jit_steps=jit_steps, _state=state, stacked=sp)
+                      jit_steps=jit_steps, _state=state, stacked=sp,
+                      spec=spec)
 
 
 # ---------------------------------------------------------------------------
@@ -845,6 +875,9 @@ class TrainReport:
     # mem_pressure==mem_backoffs.
     faults_injected: dict | None = None
     fault_events: dict | None = None
+    # the serialised TrainSpec (spec.to_dict()) this run was configured
+    # from, so every experiments/*.json records its exact configuration
+    spec: dict | None = None
 
 
 def _step_rows(x_read: ExchangePlan, x_emit: ExchangePlan,
@@ -863,9 +896,17 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
                  eval_every: int = 0, controller: StalenessController | None = None,
                  pipeline: bool = False, seed: int = 0,
                  params0=None, opt_state0=None, planner=None,
-                 tracer=None, faults=None,
-                 guard=None) -> tuple[list, TrainReport]:
+                 tracer=None, faults=None, guard=None,
+                 spec: TrainSpec | None = None) -> tuple[list, TrainReport]:
     """Full-batch CaPGNN training under the staleness schedule.
+
+    ``spec`` (a :class:`repro.dist.TrainSpec`) supplies ``pipeline`` and
+    ``seed`` and is recorded (serialised) into ``report.spec``; the loose
+    ``pipeline``/``seed`` kwargs remain as a deprecated shim that forwards
+    into a spec derived from the runtime's (one ``DeprecationWarning``).
+    Object-valued collaborators (controller, planner, tracer, faults,
+    guard, resume state) are resources, not spec fields — they stay
+    explicit arguments on both paths.
 
     One step per epoch (full batch).  Per-step bytes are the plan's exact
     figures: a vanilla runtime would move every halo row at every layer of
@@ -921,6 +962,15 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
     (``faults_injected`` / ``fault_events``) and as per-step
     :class:`~repro.obs.StepCounters` fields.
     """
+    if spec is None:
+        warn_loose_kwargs("train_capgnn")
+        base = getattr(runtime, "spec", None)
+        spec = (base.replace(pipeline=pipeline, seed=seed)
+                if base is not None
+                else TrainSpec(pipeline=pipeline, seed=seed))
+    else:
+        pipeline = spec.pipeline
+        seed = spec.seed
     if controller is None:
         controller = StalenessController(refresh_every=xplan.refresh_every)
     params = params0 if params0 is not None else init_gnn(
@@ -1147,5 +1197,6 @@ def train_capgnn(cfg: GNNConfig, runtime, xplan: ExchangePlan,
         compile_s=compile_s,
         faults_injected=dict(fa.injected) if fa.enabled else None,
         fault_events=gd.events.as_dict() if gd is not None else None,
-        phase_stats=tr.phase_stats() if tr.enabled else None)
+        phase_stats=tr.phase_stats() if tr.enabled else None,
+        spec=spec.to_dict())
     return params, report

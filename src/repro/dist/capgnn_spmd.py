@@ -68,6 +68,7 @@ from .capgnn_sim import (RUNTIME_FEATURES, halo_dtype_info, init_caches,
                          make_adj_builder)
 from .exchange import ExchangePlan, StackedParts
 from .host_store import HostFeatureStore
+from .spec import TrainSpec, halo_dtype_name, warn_loose_kwargs
 
 __all__ = ["make_spmd_runtime", "SpmdRuntime", "TRANSPORTS",
            "spmd_exchange_arrays"]
@@ -204,6 +205,9 @@ class SpmdRuntime:
     # the stacked layout this runtime was built over — kept for padded-row
     # accounting under uneven (resource-aware) partitions
     stacked: StackedParts | None = dataclasses.field(default=None, repr=False)
+    # the TrainSpec this runtime was configured from (always set — the
+    # loose-kwarg shim synthesises one), recorded into TrainReport.spec
+    spec: TrainSpec | None = dataclasses.field(default=None, repr=False)
 
     def padding_stats(self) -> dict:
         """Valid vs padded stacked-row counts (see
@@ -284,7 +288,8 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                       halo_dtype=None, donate: bool = True,
                       pallas_pack: bool = False, features: str = "device",
                       host_store: HostFeatureStore | None = None,
-                      prefetch_depth: int = 2) -> SpmdRuntime:
+                      prefetch_depth: int = 2,
+                      spec: TrainSpec | None = None) -> SpmdRuntime:
     """``backend`` mirrors :func:`make_sim_runtime`: the per-device local
     aggregation runs through the edge-list segment-sum, the Pallas
     blocked-ELL kernel, or the hybrid ELL+COO pack — the exchange
@@ -307,7 +312,31 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
     flight while the current step runs), and the per-layer global
     buffers are host-resident between steps (d2h writeback on refresh,
     replicated h2d stage for the stale reads).
+
+    ``spec`` (a :class:`repro.dist.TrainSpec`) is the configuration
+    surface; when passed it overrides every loose configuration kwarg
+    (the deprecated shim forwards them into a synthesised spec with one
+    ``DeprecationWarning`` — see the README migration note).  ``mesh``,
+    ``axis`` and ``host_store`` stay real arguments: resources, not
+    choices.
     """
+    if spec is None:
+        warn_loose_kwargs("make_spmd_runtime")
+        spec = TrainSpec(strategy="halo_1d", backend=backend,
+                         transport=transport, features=features,
+                         halo_dtype=halo_dtype_name(halo_dtype),
+                         exchange_layer0=exchange_layer0, donate=donate,
+                         interpret=interpret, pallas_pack=pallas_pack,
+                         prefetch_depth=prefetch_depth)
+    exchange_layer0 = spec.exchange_layer0
+    backend = spec.backend
+    interpret = spec.interpret
+    transport = spec.transport
+    halo_dtype = spec.halo_dtype
+    donate = spec.donate
+    pallas_pack = spec.pallas_pack
+    features = spec.features
+    prefetch_depth = spec.prefetch_depth
     if transport not in TRANSPORTS:
         raise ValueError(f"unknown transport {transport!r}; "
                          f"expected one of {TRANSPORTS}")
@@ -845,4 +874,5 @@ def make_spmd_runtime(cfg: GNNConfig, sp: StackedParts, xplan: ExchangePlan,
                        evaluate=evaluate, caches0=caches0, backend=backend,
                        transport=transport, halo_dtype_bytes=hd_bytes,
                        features=features, host_store=store,
-                       jit_steps=jit_steps, _state=state, stacked=sp)
+                       jit_steps=jit_steps, _state=state, stacked=sp,
+                       spec=spec)

@@ -33,27 +33,47 @@ def run_gnn(args) -> dict:
     from repro.models.gnn import GNNConfig, init_gnn
     from repro.optim import adam
 
+    from repro.dist.spec import TrainSpec
+    from repro.dist.strategy import StrategyCapabilityError, get_strategy
+
     task = make_task(args.dataset, scale=args.scale, feat_dim=args.feat_dim,
                      seed=args.seed)
     g = task.graph
     p = args.parts
 
+    # one constructor path for the whole config surface: CLI flags ->
+    # TrainSpec (validated, including strategy capability checks)
+    try:
+        spec = TrainSpec.from_cli_args(args)
+        strat = get_strategy(spec.strategy)
+    except ValueError as e:       # includes StrategyCapabilityError
+        raise SystemExit(str(e))
+    is_15d = spec.strategy == "spmm_15d"
+    c = spec.replication
+    if is_15d and p % (c * c):
+        raise SystemExit(
+            f"spmm_15d needs --parts divisible by replication**2 "
+            f"(P % c**2 == 0): got --parts={p} --replication={c}")
+    # under spmm_15d --parts is the total device count P; the graph is
+    # partitioned into the pr = P / c block rows
+    n_parts = p // c if is_15d else p
+
     # device group first: with --uneven the profile shapes the partition
     # sizes (RAPA's resource-aware pre-partition), not just the pruning
     group = getattr(args, "group", "auto")
     if group == "auto":
-        group = f"x{p}" if f"x{p}" in PAPER_GROUPS else "uniform"
-    profiles = ([PROFILES["rtx3090"]] * p if group == "uniform"
+        group = f"x{n_parts}" if f"x{n_parts}" in PAPER_GROUPS else "uniform"
+    profiles = ([PROFILES["rtx3090"]] * n_parts if group == "uniform"
                 else make_group(PAPER_GROUPS[group]))
-    if len(profiles) != p:
+    if len(profiles) != n_parts:
         raise SystemExit(f"device group {group!r} has {len(profiles)} "
-                         f"devices but --parts={p}")
+                         f"devices but the run needs {n_parts} partitions")
 
     uneven = getattr(args, "uneven", True)
     weights = capability_weights(profiles) if uneven else None
     part_fn = {"metis": metis_partition, "random": random_partition}[args.partitioner]
-    assign = part_fn(g, p, seed=args.seed, weights=weights)
-    ps = build_partition(g, assign, hops=1, parts=p)
+    assign = part_fn(g, n_parts, seed=args.seed, weights=weights)
+    ps = build_partition(g, assign, hops=1, parts=n_parts)
     if args.rapa:
         res = do_partition(ps, profiles, RapaConfig(feat_dim=args.feat_dim))
         ps = res.partition_set
@@ -61,6 +81,12 @@ def run_gnn(args) -> dict:
     cfg = GNNConfig(model=args.model, in_dim=task.features.shape[1],
                     hidden_dim=args.hidden, out_dim=task.num_classes,
                     num_layers=args.layers)
+    if is_15d:
+        try:
+            return _run_gnn_15d(args, spec, strat, task, ps, cfg, group,
+                                uneven)
+        except StrategyCapabilityError as e:
+            raise SystemExit(str(e))
     if args.jaca:
         cap = cal_capacity(ps, cfg.feat_dims, profiles,
                            m_cpu_gib=args.cpu_cache_gib)
@@ -80,15 +106,10 @@ def run_gnn(args) -> dict:
         xplan = build_exchange_plan(ps, plan)
     sp = stack_partitions(ps, task, backend=args.backend)
     opt = adam(args.lr)
-    halo_dtype = getattr(args, "halo_dtype", "f32")
-    features = getattr(args, "features", "device")
-    prefetch_depth = getattr(args, "prefetch_depth", 2)
-    runtime = make_sim_runtime(cfg, sp, xplan, opt,
-                               exchange_layer0=not args.jaca,
-                               backend=args.backend,
-                               halo_dtype=halo_dtype,
-                               features=features,
-                               prefetch_depth=prefetch_depth)
+    halo_dtype = spec.halo_dtype
+    features = spec.features
+    prefetch_depth = spec.prefetch_depth
+    runtime = make_sim_runtime(cfg, sp, xplan, opt, spec=spec)
     ctl = StalenessController(refresh_every=args.refresh_every,
                               adaptive=args.adaptive_staleness,
                               replan_every=getattr(args, "replan_every", 1))
@@ -137,13 +158,14 @@ def run_gnn(args) -> dict:
     with device_trace(device_trace_dir):
         params, report = train_capgnn(cfg, runtime, xplan, p, opt,
                                       epochs=run_epochs, controller=ctl,
-                                      pipeline=args.pipeline, seed=args.seed,
+                                      spec=spec,
                                       params0=params0, opt_state0=opt_state0,
                                       planner=planner, tracer=tracer,
                                       faults=faults, guard=guard)
     _, test_acc = runtime.evaluate(params, "test")
     out = {
         "dataset": args.dataset, "model": args.model, "parts": p,
+        "strategy": spec.strategy, "replication": spec.replication,
         "group": group, "uneven": bool(uneven),
         "inner_sizes": [pt.n_inner for pt in ps.parts],
         "stack_waste_frac": runtime.padding_stats().get("waste_frac"),
@@ -177,6 +199,72 @@ def run_gnn(args) -> dict:
     print(json.dumps(out, indent=1))
     if args.ckpt_dir:
         from repro.checkpoint import save_checkpoint
+        save_checkpoint(args.ckpt_dir, start_epoch + run_epochs,
+                        {"params": params,
+                         "opt_state": report.final_opt_state})
+    return out
+
+
+def _run_gnn_15d(args, spec, strat, task, ps, cfg, group, uneven) -> dict:
+    """The ``--strategy spmm_15d`` branch of ``run_gnn``: 1.5D replicated-
+    row block SpMM over a real ``(grp, sub, repl)`` device mesh.  Needs
+    ``--parts`` visible devices (force host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=P`` on CPU).
+    Every step is exact (refresh-equivalent), so the staleness/caching
+    flags do not apply — ``TrainSpec.from_cli_args`` normalises them away
+    and the capability validation rejects explicit halo-only requests."""
+    import jax
+    from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+    from repro.models.gnn import init_gnn
+    from repro.optim import adam
+
+    p = args.parts
+    if len(jax.devices()) < p:
+        raise SystemExit(
+            f"spmm_15d with --parts={p} needs {p} devices but only "
+            f"{len(jax.devices())} are visible; on CPU force host devices "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count={p}")
+    layout = strat.build_layout(ps, task, spec)
+    opt = adam(args.lr)
+    runtime = strat.make_spmd_runtime(cfg, layout, opt, spec)
+
+    start_epoch, params0, opt_state0 = 0, None, None
+    if args.resume and args.ckpt_dir:
+        step = latest_step(args.ckpt_dir)
+        if step is not None:
+            like = init_gnn(jax.random.PRNGKey(args.seed), cfg)
+            state = load_checkpoint(args.ckpt_dir, step,
+                                    {"params": like,
+                                     "opt_state": opt.init(like)})
+            params0, opt_state0 = state["params"], state["opt_state"]
+            start_epoch = step
+    run_epochs = max(0, args.epochs - start_epoch)
+
+    params, report = strat.train(cfg, runtime, layout, opt, spec,
+                                 epochs=run_epochs, seed=args.seed,
+                                 params0=params0, opt_state0=opt_state0)
+    _, test_acc = runtime.evaluate(params, "test")
+    out = {
+        "dataset": args.dataset, "model": args.model, "parts": p,
+        "strategy": spec.strategy, "replication": spec.replication,
+        "block_rows": layout.pr, "group_size": layout.g,
+        "group": group, "uneven": bool(uneven),
+        "inner_sizes": [pt.n_inner for pt in ps.parts],
+        "epochs": args.epochs, "resumed_from": start_epoch,
+        "final_loss": report.losses[-1] if report.losses else None,
+        "halo_dtype": spec.halo_dtype,
+        "test_acc": test_acc, "comm_bytes": report.comm_bytes,
+        # vanilla = dense 1D full-H all-gather on the same block rows, so
+        # the reduction isolates the replication benefit
+        "comm_reduction_vs_vanilla": report.comm_reduction,
+        "fwd_collective_bytes_per_device": runtime.forward_bytes_per_device,
+        "refresh_steps": report.refresh_steps,
+        "cached_steps": report.cached_steps,
+        "compile_s": round(report.compile_s, 3),
+        "wall_time_s": round(report.wall_time_s, 2),
+    }
+    print(json.dumps(out, indent=1))
+    if args.ckpt_dir:
         save_checkpoint(args.ckpt_dir, start_epoch + run_epochs,
                         {"params": params,
                          "opt_state": report.final_opt_state})
@@ -246,6 +334,19 @@ def main():
     g.add_argument("--feat-dim", type=int, default=64)
     g.add_argument("--model", default="gcn",
                    choices=["gcn", "sage", "gat", "gin"])
+    g.add_argument("--strategy", default="halo_1d",
+                   choices=["halo_1d", "spmm_15d"],
+                   help="distribution model (repro.dist.strategy): "
+                        "'halo_1d' is the paper's 1D vertex partition + "
+                        "halo exchange (JACA/staleness/host-store "
+                        "capable); 'spmm_15d' is communication-avoiding "
+                        "1.5D replicated-row block SpMM over a real "
+                        "device mesh — --parts is then the total device "
+                        "count P, partitioned into P/c block rows")
+    g.add_argument("--replication", type=int, default=1,
+                   help="1.5D row-replication factor c (spmm_15d only; "
+                        "needs P %% c**2 == 0). c=1 degenerates to dense "
+                        "1D all-gather")
     g.add_argument("--backend", default="edges",
                    choices=["edges", "ell", "hybrid"],
                    help="local aggregation backend (ell/hybrid run the "

@@ -32,8 +32,9 @@ def main():
     from repro.core import (AdaptivePlanner, CacheCapacity,
                             build_cache_plan)
     from repro.data.gnn_data import FullBatchTask, split_masks
-    from repro.dist import (build_exchange_plan, exchange_capacity,
-                            init_caches, stack_partitions)
+    from repro.dist import (TrainSpec, build_exchange_plan,
+                            exchange_capacity, init_caches,
+                            stack_partitions)
     from repro.dist.capgnn_spmd import make_spmd_runtime
     from repro.graph import (build_partition, metis_partition, rmat,
                              symmetric_normalize, synth_features)
@@ -62,7 +63,8 @@ def main():
 
     def make(xp):
         return make_spmd_runtime(cfg, sp, xp, opt, mesh, axis="data",
-                                 transport=transport, donate=False)
+                                 spec=TrainSpec(transport=transport,
+                                                donate=False))
 
     params0 = init_gnn(jax.random.PRNGKey(3), cfg)
 

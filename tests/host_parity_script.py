@@ -46,7 +46,7 @@ def main():
     import jax.numpy as jnp
     from repro.core import CacheCapacity, build_cache_plan
     from repro.data.gnn_data import FullBatchTask, split_masks
-    from repro.dist import (build_exchange_plan, init_caches,
+    from repro.dist import (TrainSpec, build_exchange_plan, init_caches,
                             make_sim_runtime, stack_partitions)
     from repro.dist.capgnn_spmd import make_spmd_runtime
     from repro.graph import (build_partition, metis_partition, rmat,
@@ -75,25 +75,20 @@ def main():
     assert xplan.local.n_rows > 0 and xplan.glob.n_unique > 0
     sp = stack_partitions(ps, task, backend=backend)
     opt = sgd(1.0)   # update == -grad: parity below IS gradient parity
-    halo_dtype = "bf16" if bf16 else None
+    halo_dtype = "bf16" if bf16 else "f32"
     # bf16: device mode reads layer-0 local-tier rows from the resident
     # f32 table while host mode stages them through the bf16 PCIe cast —
     # an expected one-quantisation gap; f32 must be exact
     tol = 5e-3 if bf16 else TOL
 
     mesh = jax.make_mesh((parts,), ("data",))
-    sim_dev = make_sim_runtime(cfg, sp, xplan, opt, backend=backend,
-                               halo_dtype=halo_dtype, donate=False)
-    sim_host = make_sim_runtime(cfg, sp, xplan, opt, backend=backend,
-                                halo_dtype=halo_dtype, donate=False,
-                                features="host", prefetch_depth=2)
-    spmd_dev = make_spmd_runtime(cfg, sp, xplan, opt, mesh, backend=backend,
-                                 transport=transport, halo_dtype=halo_dtype,
-                                 donate=False)
-    spmd_host = make_spmd_runtime(cfg, sp, xplan, opt, mesh, backend=backend,
-                                  transport=transport, halo_dtype=halo_dtype,
-                                  donate=False, features="host",
-                                  prefetch_depth=2)
+    spec_dev = TrainSpec(backend=backend, transport=transport,
+                         halo_dtype=halo_dtype, donate=False)
+    spec_host = spec_dev.replace(features="host", prefetch_depth=2)
+    sim_dev = make_sim_runtime(cfg, sp, xplan, opt, spec=spec_dev)
+    sim_host = make_sim_runtime(cfg, sp, xplan, opt, spec=spec_host)
+    spmd_dev = make_spmd_runtime(cfg, sp, xplan, opt, mesh, spec=spec_dev)
+    spmd_host = make_spmd_runtime(cfg, sp, xplan, opt, mesh, spec=spec_host)
     params = init_gnn(jax.random.PRNGKey(7), cfg)
 
     # ---- fresh-forward logits parity
@@ -151,15 +146,11 @@ def main():
     # ---- donation: chained donated host-mode steps run clean
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
+        spec_don = spec_host.replace(donate=True)
         for mk in (lambda: make_sim_runtime(cfg, sp, xplan, opt,
-                                            backend=backend,
-                                            halo_dtype=halo_dtype,
-                                            features="host"),
+                                            spec=spec_don),
                    lambda: make_spmd_runtime(cfg, sp, xplan, opt, mesh,
-                                             backend=backend,
-                                             transport=transport,
-                                             halo_dtype=halo_dtype,
-                                             features="host")):
+                                             spec=spec_don)):
             rt_d = mk()
             pp = jax.tree.map(jnp.copy, params)
             oo = opt.init(pp)

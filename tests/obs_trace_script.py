@@ -31,8 +31,8 @@ def main():
     from repro.core import (CacheCapacity, StalenessController,
                             build_cache_plan)
     from repro.data.gnn_data import FullBatchTask, split_masks
-    from repro.dist import (build_exchange_plan, stack_partitions,
-                            train_capgnn)
+    from repro.dist import (TrainSpec, build_exchange_plan,
+                            stack_partitions, train_capgnn)
     from repro.dist.capgnn_spmd import make_spmd_runtime
     from repro.graph import (build_partition, metis_partition, rmat,
                              symmetric_normalize, synth_features)
@@ -60,14 +60,15 @@ def main():
     sp = stack_partitions(ps, task)
     opt = adam(1e-2)
     mesh = jax.make_mesh((parts,), ("data",))
-    rt = make_spmd_runtime(cfg, sp, xplan, opt, mesh, transport=transport,
-                           features=features)
+    spec = TrainSpec(transport=transport, features=features,
+                     refresh_every=2, pipeline=True)
+    rt = make_spmd_runtime(cfg, sp, xplan, opt, mesh, spec=spec)
 
     epochs = 6
     tr = Tracer()
     ctl = StalenessController(refresh_every=2)
     _, rep = train_capgnn(cfg, rt, xplan, parts, opt, epochs=epochs,
-                          controller=ctl, pipeline=True, eval_every=0,
+                          controller=ctl, spec=spec, eval_every=0,
                           tracer=tr)
 
     tot = tr.totals()

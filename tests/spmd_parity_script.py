@@ -27,7 +27,7 @@ def main():
     from repro.core import (PROFILES, StalenessController, build_cache_plan,
                             cal_capacity)
     from repro.data.gnn_data import FullBatchTask, split_masks
-    from repro.dist import (build_exchange_plan, make_sim_runtime,
+    from repro.dist import (TrainSpec, build_exchange_plan, make_sim_runtime,
                             stack_partitions)
     from repro.dist.capgnn_spmd import make_spmd_runtime
     from repro.graph import (build_partition, metis_partition, rmat,
@@ -54,7 +54,8 @@ def main():
 
     # donate=False: the parity check re-uses (params, caches) across the
     # sim and SPMD runtimes' step calls
-    sim = make_sim_runtime(cfg, sp, xplan, opt, donate=False)
+    sim = make_sim_runtime(cfg, sp, xplan, opt,
+                           spec=TrainSpec(donate=False))
 
     if multi_pod:
         mesh = jax.make_mesh((2, 2), ("pod", "data"))
@@ -65,7 +66,7 @@ def main():
     sp_b = (sp if backend == "edges"
             else stack_partitions(ps, task, backend=backend))
     spmd = make_spmd_runtime(cfg, sp_b, xplan, opt, mesh, axis=axis,
-                             backend=backend, donate=False)
+                             spec=TrainSpec(backend=backend, donate=False))
 
     params = init_gnn(jax.random.PRNGKey(7), cfg)
 

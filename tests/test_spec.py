@@ -1,0 +1,155 @@
+"""TrainSpec: validation, serialisation round-trips, CLI construction,
+and the CLI-args -> spec -> runtime -> TrainReport.spec provenance chain.
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.dist import (TrainSpec, StrategyCapabilityError, get_strategy,
+                        build_exchange_plan, stack_partitions,
+                        make_sim_runtime, train_capgnn)
+
+
+def test_defaults_valid_and_frozen():
+    s = TrainSpec()
+    assert s.strategy == "halo_1d" and s.replication == 1
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s.backend = "ell"
+    assert s.replace(backend="ell").backend == "ell"
+
+
+@pytest.mark.parametrize("kw", [
+    {"backend": "csr"}, {"transport": "nccl"}, {"features": "disk"},
+    {"halo_dtype": "fp8"}, {"cache_policy": "mru"},
+    {"replication": 0}, {"refresh_every": 0}, {"prefetch_depth": 0},
+])
+def test_validation_rejects(kw):
+    with pytest.raises(ValueError):
+        TrainSpec(**kw)
+
+
+def test_strategy_capability_validation():
+    # halo_1d owns no replication axis
+    with pytest.raises(StrategyCapabilityError):
+        TrainSpec(replication=2)
+    # these knobs are halo_1d machinery, denied under spmm_15d
+    for kw in ({"pipeline": True}, {"features": "host"},
+               {"cache_policy": "lru"}, {"refresh_every": 4},
+               {"backend": "ell"}, {"faults": "fetch_drop:p=0.5"},
+               {"guard_every": 5}, {"pallas_pack": True}):
+        with pytest.raises(StrategyCapabilityError):
+            TrainSpec(strategy="spmm_15d", replication=2, **kw)
+    # ...but the exact subset is fine
+    assert TrainSpec(strategy="spmm_15d", replication=2).replication == 2
+
+
+def test_unknown_strategy_names_valid_options():
+    with pytest.raises(ValueError, match="halo_1d, spmm_15d"):
+        TrainSpec(strategy="2d")
+    with pytest.raises(ValueError, match="halo_1d, spmm_15d"):
+        get_strategy("spmm_2d")
+
+
+def test_dict_round_trip():
+    s = TrainSpec(backend="ell", transport="p2p", halo_dtype="bf16",
+                  pipeline=True, refresh_every=4, cache_policy="lru",
+                  faults="grad_nan:at=3", guard_every=2, seed=11)
+    d = s.to_dict()
+    assert d["transport"] == "p2p" and d["refresh_every"] == 4
+    assert TrainSpec.from_dict(d) == s
+    with pytest.raises(ValueError, match="unknown TrainSpec fields"):
+        TrainSpec.from_dict({**d, "wire_dtype": "bf16"})
+
+
+def test_from_cli_args():
+    # launch.train-style flags; jaca=True means exchange_layer0=False
+    ns = argparse.Namespace(backend="hybrid", halo_dtype="bf16",
+                            features="host", jaca=True, pipeline=True,
+                            refresh_every=6, cache_policy="drift",
+                            replan_every=2, cpu_cache_gib=1.5,
+                            faults="fetch_drop:p=0.2", guard_every=3,
+                            seed=9)
+    s = TrainSpec.from_cli_args(ns)
+    assert (s.backend, s.halo_dtype, s.features) == ("hybrid", "bf16",
+                                                     "host")
+    assert s.exchange_layer0 is False and s.pipeline and s.refresh_every == 6
+    assert s.cache_policy == "drift" and s.cpu_cache_gib == 1.5
+    # missing attributes fall back to the CLI defaults
+    s2 = TrainSpec.from_cli_args(argparse.Namespace())
+    assert s2 == TrainSpec(exchange_layer0=False)
+    # spmm_15d normalises the halo-only staleness defaults away instead
+    # of tripping capability validation on the CLI's refresh_every=4
+    s3 = TrainSpec.from_cli_args(argparse.Namespace(
+        strategy="spmm_15d", replication=2, refresh_every=4,
+        pipeline=True, jaca=False))
+    assert s3.strategy == "spmm_15d" and s3.refresh_every == 1
+    assert not s3.pipeline and s3.exchange_layer0
+
+
+def _tiny_problem(parts=2):
+    from repro.core import PROFILES, build_cache_plan, cal_capacity
+    from repro.data.gnn_data import FullBatchTask, split_masks
+    from repro.graph import (build_partition, metis_partition, rmat,
+                             symmetric_normalize, synth_features)
+    from repro.models.gnn import GNNConfig
+
+    g = rmat(120, 480, seed=5)
+    feats, labels = synth_features(g, 6, 3, seed=5)
+    gn = symmetric_normalize(g)
+    tr, va, te = split_masks(g.num_nodes, seed=5)
+    task = FullBatchTask(graph=gn, features=feats, labels=labels,
+                         train_mask=tr, val_mask=va, test_mask=te,
+                         num_classes=3)
+    ps = build_partition(gn, metis_partition(gn, parts, seed=5), hops=1)
+    cfg = GNNConfig(model="gcn", in_dim=6, hidden_dim=8, out_dim=3,
+                    num_layers=2)
+    cap = cal_capacity(ps, cfg.feat_dims, [PROFILES["rtx3090"]] * parts)
+    plan = build_cache_plan(ps, cap, refresh_every=2)
+    return ps, task, cfg, plan
+
+
+def test_spec_round_trip_into_report():
+    """CLI args -> TrainSpec -> runtime -> TrainReport.spec: every run
+    records the exact configuration that produced it."""
+    from repro.optim import adam
+
+    ps, task, cfg, plan = _tiny_problem()
+    ns = argparse.Namespace(refresh_every=2, seed=3, jaca=False)
+    spec = TrainSpec.from_cli_args(ns)
+    xplan = build_exchange_plan(ps, plan)
+    sp = stack_partitions(ps, task)
+    opt = adam(1e-2)
+    rt = make_sim_runtime(cfg, sp, xplan, opt, spec=spec)
+    assert rt.spec is spec
+    _, report = train_capgnn(cfg, rt, xplan, ps.num_parts, opt, epochs=3,
+                             spec=spec)
+    assert report.spec == spec.to_dict()
+    assert TrainSpec.from_dict(report.spec) == spec
+    assert report.spec["seed"] == 3 and report.spec["refresh_every"] == 2
+    assert np.isfinite(report.losses).all()
+
+
+def test_loose_kwargs_deprecated_but_equivalent():
+    """The legacy loose-kwarg constructors warn once and synthesise the
+    same spec the explicit path passes — bit-identical training."""
+    from repro.optim import adam
+
+    ps, task, cfg, plan = _tiny_problem()
+    xplan = build_exchange_plan(ps, plan)
+    sp = stack_partitions(ps, task)
+    opt = adam(1e-2)
+    with pytest.warns(DeprecationWarning, match="make_sim_runtime"):
+        rt_old = make_sim_runtime(cfg, sp, xplan, opt, halo_dtype="bf16")
+    spec = TrainSpec(halo_dtype="bf16")
+    rt_new = make_sim_runtime(cfg, sp, xplan, opt, spec=spec)
+    assert rt_old.spec == spec == rt_new.spec
+    with pytest.warns(DeprecationWarning, match="train_capgnn"):
+        _, rep_old = train_capgnn(cfg, rt_old, xplan, ps.num_parts, opt,
+                                  epochs=4, seed=1)
+    _, rep_new = train_capgnn(cfg, rt_new, xplan, ps.num_parts, opt,
+                              epochs=4, spec=spec.replace(seed=1))
+    assert rep_old.losses == rep_new.losses      # bit-identical
+    assert rep_old.comm_bytes == rep_new.comm_bytes
+    assert rep_old.spec == rep_new.spec

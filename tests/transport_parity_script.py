@@ -45,7 +45,7 @@ def main():
     import jax.numpy as jnp
     from repro.core import PROFILES, build_cache_plan, cal_capacity
     from repro.data.gnn_data import FullBatchTask, split_masks
-    from repro.dist import (build_exchange_plan, init_caches,
+    from repro.dist import (TrainSpec, build_exchange_plan, init_caches,
                             make_sim_runtime, stack_partitions)
     from repro.dist.capgnn_spmd import make_spmd_runtime
     from repro.graph import (build_partition, metis_partition, rmat,
@@ -69,7 +69,7 @@ def main():
     xplan = build_exchange_plan(ps, plan)
     sp = stack_partitions(ps, task, backend=backend)
     opt = sgd(1.0)   # update == -grad: parity below IS gradient parity
-    halo_dtype = "bf16" if bf16 else None
+    halo_dtype = "bf16" if bf16 else "f32"
     # bf16 rounds both transports' payloads identically (forward logits
     # stay <= 1e-5), but backward cotangents ALSO round through the wire
     # cast, and the ring's transpose accumulates them in a different order
@@ -84,11 +84,10 @@ def main():
         mesh = jax.make_mesh((4,), ("data",))
         axis = "data"
 
-    sim = make_sim_runtime(cfg, sp, xplan, opt, backend=backend,
-                           halo_dtype=halo_dtype, donate=False)
+    spec = TrainSpec(backend=backend, halo_dtype=halo_dtype, donate=False)
+    sim = make_sim_runtime(cfg, sp, xplan, opt, spec=spec)
     rts = {t: make_spmd_runtime(cfg, sp, xplan, opt, mesh, axis=axis,
-                                backend=backend, transport=t,
-                                halo_dtype=halo_dtype, donate=False)
+                                spec=spec.replace(transport=t))
            for t in ("allgather", "p2p")}
     params = init_gnn(jax.random.PRNGKey(7), cfg)
 
@@ -148,8 +147,8 @@ def main():
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         rt_d = make_spmd_runtime(cfg, sp, xplan, opt, mesh, axis=axis,
-                                 backend=backend, transport="p2p",
-                                 halo_dtype=halo_dtype)
+                                 spec=spec.replace(transport="p2p",
+                                                   donate=True))
         pp = jax.tree.map(jnp.copy, params)
         oo, cc = opt.init(pp), init_caches(cfg, xplan, parts)
         for i in range(3):
